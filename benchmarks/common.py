@@ -1,0 +1,61 @@
+"""Shared benchmark substrate: one trained tiny model reused by every
+quality table (the paper's protocol at container scale — see DESIGN.md §7
+scale note), plus perplexity evaluation."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import calibrate as cal
+from repro.data import LMBatchLoader, make_corpus_tokens
+from repro.launch.train import train
+from repro.models import transformer as tf
+
+EVAL_SEQ = 128
+EVAL_BATCHES = 4
+
+
+@functools.lru_cache(maxsize=2)
+def trained_model(arch: str = "llama2-7b", steps: int = 300):
+    cfg, params, losses = train(arch=arch, tiny=True, steps=steps, batch=16,
+                                seq=EVAL_SEQ, lr=2e-3, log_every=10 ** 9)
+    corpus = make_corpus_tokens(cfg.vocab, 30000, seed=0)
+    return cfg, params, losses, corpus
+
+
+def eval_ppl(cfg, params, corpus, scan=False) -> float:
+    loader = LMBatchLoader(corpus, 8, EVAL_SEQ)
+    nll = []
+    for b in loader.eval_batches(EVAL_BATCHES):
+        nll.append(float(tf.loss_fn(cfg, params, {"tokens": jnp.asarray(b)},
+                                    scan=scan)))
+    return float(np.exp(np.mean(nll)))
+
+
+def calib_batches(cfg, corpus, few_shot: bool, n: int = 5):
+    if few_shot:
+        loader = LMBatchLoader(corpus, 1, EVAL_SEQ, seed=123)
+        return [{"tokens": jnp.asarray(loader.next_batch())}
+                for _ in range(n)]
+    toks = cal.zero_shot_tokens(cfg.vocab, EVAL_SEQ)
+    return [{"tokens": jnp.asarray(toks)}]
+
+
+def run_stats(cfg, params, batches):
+    return cal.calibrate(
+        lambda p, b, ctx: tf.loss_fn(cfg, p, b, ctx=ctx, scan=False),
+        params, batches)
+
+
+class Row:
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)

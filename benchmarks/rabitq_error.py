@@ -1,0 +1,37 @@
+"""Paper App. A.2 (eq. 11): empirical inner-product error vs the
+5.75/(sqrt(d) 2^b) bound — the assumption AllocateBits' alpha model rests on."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hadamard as h
+from repro.core import rabitq
+
+from .common import Row
+
+
+def run(row: Row):
+    for d in (512, 2048):
+        for bits in (1, 2, 4, 8):
+            key = jax.random.PRNGKey(d + bits)
+            w = jax.random.normal(key, (d, 64))
+            s = h.rademacher(jax.random.fold_in(key, 1), d)
+            wr = h.rht(w, s, axis=0)
+            t0 = time.time()
+            q = rabitq.quantize(wr, bits)
+            dt = time.time() - t0
+            x = jax.random.normal(jax.random.fold_in(key, 2), (64, d))
+            est = rabitq.estimate_matmul(x, q)
+            ref = x @ wr
+            scale = (jnp.linalg.norm(x, axis=1)[:, None]
+                     * jnp.linalg.norm(wr, axis=0)[None, :])
+            rel = np.asarray(jnp.abs(est - ref) / scale)
+            # normalized: measured p99.9 error as a fraction of the bound
+            bound = rabitq.C_ERROR / (np.sqrt(d) * 2 ** bits)
+            frac = float(np.quantile(rel, 0.999) / bound)
+            row.add(f"rabitq_err/d{d}_b{bits}", dt * 1e6,
+                    f"p999_over_bound={frac:.3f};within={(rel < bound).mean():.4f}")

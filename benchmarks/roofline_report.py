@@ -1,0 +1,27 @@
+"""Emit the §Roofline table from dry-run artifacts (no compilation here)."""
+from __future__ import annotations
+
+from repro.launch import roofline
+
+from .common import Row
+
+
+def run(row: Row):
+    for mesh in ("16x16", "2x16x16"):
+        recs = roofline.load_records(mesh)
+        if not recs:
+            row.add(f"roofline/{mesh}", 0.0, "no_artifacts")
+            continue
+        from repro.configs.registry import get_config
+        for r in recs:
+            if r["status"] != "ok":
+                continue
+            rl = roofline.analyze(r, get_config(r["arch"]))
+            t_dom = max(rl.t_compute, rl.t_memory, rl.t_collective)
+            row.add(f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                    t_dom * 1e6,
+                    f"dom={rl.dominant};tc_ms={rl.t_compute*1e3:.2f};"
+                    f"tm_ms={rl.t_memory*1e3:.2f};"
+                    f"tl_ms={rl.t_collective*1e3:.2f};"
+                    f"useful={rl.useful_ratio:.3f};"
+                    f"frac={rl.roofline_frac:.3f}")

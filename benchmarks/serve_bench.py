@@ -1,0 +1,39 @@
+"""Serving throughput fp vs RaanA-quantized (container-scale proxy for the
+paper's §1 memory-bandwidth claim) + weight-bytes-resident accounting."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import pipeline as pipe
+from repro.launch.serve import BatchedServer
+
+from .common import Row, calib_batches, run_stats, trained_model
+
+
+def _weight_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params)
+               if hasattr(x, "dtype"))
+
+
+def run(row: Row, gen: int = 16, requests: int = 4):
+    cfg, params, _, corpus = trained_model()
+    prompts = np.tile(np.asarray(corpus[:32], np.int32)[None], (requests, 1))
+
+    def bench(p, label):
+        server = BatchedServer(cfg, p, max_context=32 + gen)
+        out = server.generate(prompts, 2)           # warmup/compile
+        t0 = time.time()
+        out = server.generate(prompts, gen)
+        dt = time.time() - t0
+        row.add(f"serve/{label}", dt / (gen * requests) * 1e6,
+                f"tok_s={gen*requests/dt:.1f};weight_bytes={_weight_bytes(p)}")
+        return out
+
+    bench(params, "fp32")
+    stats = run_stats(cfg, params, calib_batches(cfg, corpus, False))
+    qp, rep = pipe.quantize_model(cfg, params, stats, 4.3,
+                                  jax.random.PRNGKey(0))
+    bench(qp, "raana_4.3b")

@@ -1,0 +1,40 @@
+"""Paper Table 1 / 4 protocol: perplexity vs average bits, RaanA (few-shot)
+against fp16 and the RTN / GPTQ / AWQ baselines, at container scale."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.baselines.apply import apply_baseline, collect_hessians
+from repro.core import pipeline as pipe
+
+from .common import Row, calib_batches, eval_ppl, run_stats, trained_model
+
+
+def run(row: Row, bits_list=(2, 3, 4), raana_bits=(2.3, 3.3, 4.3)):
+    cfg, params, _, corpus = trained_model()
+    ppl_fp = eval_ppl(cfg, params, corpus)
+    row.add("table1/fp16", 0.0, f"ppl={ppl_fp:.3f};bits=32")
+
+    batches = calib_batches(cfg, corpus, few_shot=True)
+    stats = run_stats(cfg, params, batches)
+    hess, norms = collect_hessians(cfg, params, batches)
+
+    for b, rb in zip(bits_list, raana_bits):
+        for method in ("rtn", "gptq", "awq"):
+            t0 = time.time()
+            qp, avg_bits, _ = apply_baseline(cfg, params, method, b,
+                                             hessians=hess,
+                                             x_col_norms=norms)
+            dt = time.time() - t0
+            ppl = eval_ppl(cfg, qp, corpus)
+            row.add(f"table1/{method}_{b}b", dt * 1e6,
+                    f"ppl={ppl:.3f};avg_bits={avg_bits:.2f}")
+        t0 = time.time()
+        qp, rep = pipe.quantize_model(cfg, params, stats, rb,
+                                      jax.random.PRNGKey(1))
+        dt = time.time() - t0
+        ppl = eval_ppl(cfg, qp, corpus)
+        row.add(f"table1/raana_{rb}b", dt * 1e6,
+                f"ppl={ppl:.3f};avg_bits={rep.avg_bits:.2f}")

@@ -1,0 +1,27 @@
+"""Paper Table 2 / 5 protocol: few-shot (5 samples) vs zero-shot (1 synthetic
+sentence) calibration."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import pipeline as pipe
+
+from .common import Row, calib_batches, eval_ppl, run_stats, trained_model
+
+
+def run(row: Row, raana_bits=(2.3, 3.3, 4.3)):
+    cfg, params, _, corpus = trained_model()
+    for mode in ("few", "zero"):
+        batches = calib_batches(cfg, corpus, few_shot=(mode == "few"))
+        t0 = time.time()
+        stats = run_stats(cfg, params, batches)
+        t_cal = time.time() - t0
+        for rb in raana_bits:
+            qp, rep = pipe.quantize_model(cfg, params, stats, rb,
+                                          jax.random.PRNGKey(2))
+            ppl = eval_ppl(cfg, qp, corpus)
+            row.add(f"table2/raana_{mode}_{rb}b", t_cal * 1e6,
+                    f"ppl={ppl:.3f};avg_bits={rep.avg_bits:.2f};"
+                    f"n_calib={len(batches)}")

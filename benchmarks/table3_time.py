@@ -1,0 +1,50 @@
+"""Paper Table 3 protocol: quantization wall-time scaling with model size —
+RaanA vs GPTQ (the heavyweight Hessian-based baseline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.baselines.apply import apply_baseline, collect_hessians
+from repro.configs import registry
+from repro.core import calibrate as cal
+from repro.core import pipeline as pipe
+from repro.models import transformer as tf
+
+from .common import Row
+
+SIZES = {
+    "s": dict(n_layers=2, d_model=128, n_heads=4, n_kv=4, d_ff=384,
+              head_dim=32),
+    "m": dict(n_layers=4, d_model=256, n_heads=8, n_kv=8, d_ff=768,
+              head_dim=32),
+    "l": dict(n_layers=6, d_model=512, n_heads=8, n_kv=8, d_ff=1536,
+              head_dim=64),
+}
+
+
+def run(row: Row, avg_bits: float = 2.3):
+    base = registry.get_tiny("llama2-7b")
+    for name, dims in SIZES.items():
+        cfg = base.with_(name=f"timebench-{name}", **dims)
+        params = tf.init_params(cfg, jax.random.PRNGKey(0))
+        n_params = sum(x.size for x in jax.tree.leaves(params))
+        batch = {"tokens": jax.numpy.asarray(
+            cal.zero_shot_tokens(cfg.vocab, 128))}
+        # RaanA: calibration (1 bwd pass) + allocate + quantize
+        t0 = time.time()
+        stats = cal.calibrate(
+            lambda p, b, ctx: tf.loss_fn(cfg, p, b, ctx=ctx, scan=False),
+            params, [batch])
+        qp, rep = pipe.quantize_model(cfg, params, stats, avg_bits,
+                                      jax.random.PRNGKey(1))
+        t_raana = time.time() - t0
+        # GPTQ: hessian collection + per-layer solve
+        t0 = time.time()
+        hess, norms = collect_hessians(cfg, params, [batch])
+        _, _, t_g = apply_baseline(cfg, params, "gptq", 2, hessians=hess)
+        t_gptq = time.time() - t0
+        row.add(f"table3/quant_time_{name}", t_raana * 1e6,
+                f"params={n_params};raana_s={t_raana:.2f};"
+                f"gptq_s={t_gptq:.2f};speedup={t_gptq/max(t_raana,1e-9):.2f}x")

@@ -1,0 +1,34 @@
+"""Quickstart: quantize a model with RaanA in ~20 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core import calibrate as cal
+from repro.core import pipeline as pipe
+from repro.models import transformer as tf
+
+# 1. a model (tiny llama-family config; swap for any of the 10 assigned archs)
+cfg = registry.get_tiny("llama2-7b")
+params = tf.init_params(cfg, jax.random.PRNGKey(0))
+
+# 2. zero-shot calibration: ONE synthetic sentence, one backward pass
+calib = [{"tokens": jnp.asarray(cal.zero_shot_tokens(cfg.vocab, 128))}]
+stats = cal.calibrate(
+    lambda p, b, ctx: tf.loss_fn(cfg, p, b, ctx=ctx, scan=False),
+    params, calib)
+
+# 3. AllocateBits + RaBitQ-H at an arbitrary fractional budget
+qparams, report = pipe.quantize_model(cfg, params, stats, avg_bits=3.3,
+                                      key=jax.random.PRNGKey(1))
+print(f"quantized {report.n_layers} layers -> {report.avg_bits:.3f} avg bits "
+      f"in {report.wall_time_s:.1f}s")
+print("bit allocation:", sorted(set(report.per_layer_bits.values())))
+
+# 4. the quantized tree is a drop-in replacement
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 65), 0,
+                                      cfg.vocab)}
+print("fp loss  :", float(tf.loss_fn(cfg, params, batch)))
+print("q3.3 loss:", float(tf.loss_fn(cfg, qparams, batch, scan=False)))

@@ -1,0 +1,50 @@
+"""Serve a small model with batched requests, fp vs RaanA-quantized — the
+paper's deployment artifact (weight-only PTQ for cheaper inference).
+
+  PYTHONPATH=src python examples/serve_quantized.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibrate as cal
+from repro.core import pipeline as pipe
+from repro.data import ByteTokenizer
+from repro.launch.serve import BatchedServer
+from repro.launch.train import train
+from repro.models import transformer as tf
+
+
+def main():
+    cfg, params, _ = train(arch="llama2-7b", tiny=True, steps=150, batch=16,
+                           seq=128, lr=2e-3, log_every=1000)
+    tok = ByteTokenizer(cfg.vocab)
+    prompts = np.stack([tok.encode("the fox watched the morning fog ")[:24]
+                        for _ in range(4)])
+
+    def serve(p, label):
+        server = BatchedServer(cfg, p, max_context=64)
+        server.generate(prompts, 2)  # warmup
+        t0 = time.time()
+        out = server.generate(prompts, 24)
+        dt = time.time() - t0
+        wbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(p)
+                     if hasattr(x, "dtype"))
+        print(f"{label:12s} {4*24/dt:6.1f} tok/s  weights={wbytes/1e6:.1f}MB  "
+              f"sample: {tok.decode(out[0])!r}")
+        return out
+
+    serve(params, "fp32")
+    stats = cal.calibrate(
+        lambda p, b, ctx: tf.loss_fn(cfg, p, b, ctx=ctx, scan=False),
+        params, [{"tokens": jnp.asarray(cal.zero_shot_tokens(cfg.vocab, 128))}])
+    for bits in (4.3, 2.3):
+        qp, rep = pipe.quantize_model(cfg, params, stats, bits,
+                                      jax.random.PRNGKey(0))
+        serve(qp, f"raana {rep.avg_bits:.2f}b")
+
+
+if __name__ == "__main__":
+    main()

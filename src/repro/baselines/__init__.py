@@ -1,0 +1,1 @@
+from .quant_baselines import awq_quantize, gptq_quantize, rtn_quantize  # noqa: F401

@@ -1,0 +1,73 @@
+"""Apply a baseline PTQ method to a whole model (drop-in reconstructed
+weights), mirroring core.pipeline.quantize_model's layer selection so
+average-bits accounting is comparable."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import _get, _set, _walk_layer
+from repro.models.common import LinearCtx
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+from .quant_baselines import awq_quantize, gptq_quantize, rtn_quantize
+
+
+def collect_hessians(cfg: ModelConfig, params: dict, batches) -> dict:
+    ctx = LinearCtx(collect_hessian=True, collect=True)
+    for b in batches:
+        tf.loss_fn(cfg, params, b, ctx=ctx, scan=False)
+    return ({k: np.asarray(v) for k, v in ctx.hessians.items()},
+            {k: np.asarray(jnp.sqrt(t["x_col_sq"])) for k, t in
+             ctx.taps.items()})
+
+
+def apply_baseline(cfg: ModelConfig, params: dict, method: str, bits: int,
+                   hessians: dict | None = None,
+                   x_col_norms: dict | None = None, group: int = 128):
+    """Returns (params with reconstructed weights, achieved avg bits, time)."""
+    t0 = time.time()
+    p_period = cfg.scan_period
+    out = dict(params)
+    out["layers"] = []
+    total_bits = 0
+    total_m = 0
+    for jpos, stack in enumerate(params["layers"]):
+        n_j = (len(stack) if isinstance(stack, list)
+               else jax.tree.leaves(stack)[0].shape[0])
+        lst = []
+        for idx in range(n_j):
+            i = idx * p_period + jpos
+            lp = (stack[idx] if isinstance(stack, list)
+                  else jax.tree.map(lambda a: a[idx], stack))
+            lp = jax.tree.map(lambda a: a, lp)
+            for path, kind in _walk_layer(lp):
+                if kind != "linear":
+                    continue          # baselines cover 2-D weights only
+                name = f"L{i}." + ".".join(path)
+                w = np.asarray(_get(lp, path), np.float32)
+                if method == "rtn":
+                    wq, ovh = rtn_quantize(w, bits, group)
+                elif method == "gptq":
+                    h = None if hessians is None else hessians.get(name)
+                    if h is None:
+                        h = np.eye(w.shape[0])
+                    wq, ovh = gptq_quantize(w, h, bits, group)
+                elif method == "awq":
+                    n = None if x_col_norms is None else x_col_norms.get(name)
+                    if n is None:
+                        n = np.ones(w.shape[0])
+                    wq, ovh, _ = awq_quantize(w, n, bits, group)
+                else:
+                    raise ValueError(method)
+                _set(lp, path, jnp.asarray(wq))
+                total_bits += bits * w.size + ovh
+                total_m += w.size
+            lst.append(lp)
+        out["layers"].append(lst)
+    avg_bits = total_bits / max(total_m, 1)
+    return out, avg_bits, time.time() - t0

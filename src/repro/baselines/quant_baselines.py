@@ -1,0 +1,100 @@
+"""Baseline PTQ methods the paper compares against (Table 1): RTN (grouped
+round-to-nearest), GPTQ (layer-Hessian OBQ, arXiv:2210.17323), and an
+AWQ-style activation-aware scaling (arXiv:2306.00978).
+
+All take W (d_in, d_out) and return a reconstructed fp weight of the same
+shape (drop-in evaluation, like core.qlinear.reconstruct_weight), plus the
+side-info bit cost so average-bits accounting matches RaanA's.
+
+Host-side numpy: these run once per layer at quantization time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _uniform_grid(w: np.ndarray, bits: int, axis: int = 0, group: int = 0):
+    """Asymmetric min/max uniform quantization along ``axis`` (optionally in
+    groups of ``group`` input dims). Returns reconstructed array."""
+    levels = (1 << bits) - 1
+    if group and w.shape[0] > group:
+        d = w.shape[0]
+        pad = (-d) % group
+        wp = np.concatenate([w, np.zeros((pad, *w.shape[1:]), w.dtype)], 0)
+        wg = wp.reshape(-1, group, *w.shape[1:])
+        lo = wg.min(axis=1, keepdims=True)
+        hi = wg.max(axis=1, keepdims=True)
+        scale = np.maximum(hi - lo, 1e-12) / levels
+        q = np.clip(np.round((wg - lo) / scale), 0, levels)
+        out = (q * scale + lo).reshape(-1, *w.shape[1:])[:d]
+        return out
+    lo = w.min(axis=axis, keepdims=True)
+    hi = w.max(axis=axis, keepdims=True)
+    scale = np.maximum(hi - lo, 1e-12) / levels
+    q = np.clip(np.round((w - lo) / scale), 0, levels)
+    return q * scale + lo
+
+
+def rtn_quantize(w: np.ndarray, bits: int, group: int = 128):
+    """Grouped round-to-nearest.  Side info: (scale+zero) fp16 per group ->
+    2*16/group extra bits per weight."""
+    w = np.asarray(w, np.float32)
+    out = _uniform_grid(w, bits, axis=0, group=group)
+    overhead_bits = int(2 * 16 * np.ceil(w.shape[0] / group) * w.shape[1])
+    return out.astype(np.float32), overhead_bits
+
+
+def gptq_quantize(w: np.ndarray, hessian: np.ndarray, bits: int,
+                  group: int = 128, percdamp: float = 0.01):
+    """GPTQ: quantize input dims in order, propagating error through the
+    Cholesky factor of the damped inverse Hessian H = X^T X (d_in, d_in)."""
+    w = np.array(w, np.float32, copy=True)           # (d, c)
+    d, c = w.shape
+    h = np.array(hessian, np.float64, copy=True)
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    w[dead, :] = 0.0
+    damp = percdamp * np.mean(np.diag(h))
+    h[np.arange(d), np.arange(d)] += damp
+    hinv = np.linalg.inv(h)
+    # upper U with H^-1 = U^T U (as in the reference implementation):
+    # chol lower L gives H^-1 = L L^T, so U = L^T.
+    u = np.linalg.cholesky(hinv).T
+    levels = (1 << bits) - 1
+    out = np.zeros_like(w)
+    lo = hi = scale = zero = None
+    for i in range(d):
+        if group and i % group == 0:
+            blk = w[i: i + group]
+            lo = blk.min(axis=0)
+            hi = blk.max(axis=0)
+            scale = np.maximum(hi - lo, 1e-12) / levels
+            zero = lo
+        q = np.clip(np.round((w[i] - zero) / scale), 0, levels)
+        wq = q * scale + zero
+        out[i] = wq
+        err = (w[i] - wq) / u[i, i]
+        if i + 1 < d:
+            w[i + 1:] -= np.outer(u[i, i + 1:], err)
+    overhead_bits = int(2 * 16 * np.ceil(d / group) * c)
+    return out.astype(np.float32), overhead_bits
+
+
+def awq_quantize(w: np.ndarray, x_col_norms: np.ndarray, bits: int,
+                 group: int = 128, alphas=(0.0, 0.25, 0.5, 0.75, 1.0)):
+    """AWQ-style: scale salient input dims up before RTN, fold the inverse
+    scale back exactly.  Grid-search alpha minimizing ||diag(n)(W - W_hat)||_F
+    (column-norm proxy for the activation-weighted error)."""
+    w = np.asarray(w, np.float32)
+    n = np.asarray(x_col_norms, np.float64)
+    n = n / max(n.mean(), 1e-12)
+    best, best_err, best_alpha = None, np.inf, 0.0
+    for a in alphas:
+        s = np.maximum(n ** a, 1e-6)[:, None]
+        wq = _uniform_grid(w * s, bits, axis=0, group=group) / s
+        err = float(np.linalg.norm((w - wq) * n[:, None]))
+        if err < best_err:
+            best, best_err, best_alpha = wq, err, a
+    overhead_bits = int(2 * 16 * np.ceil(w.shape[0] / group) * w.shape[1]
+                        + 16 * w.shape[0])
+    return best.astype(np.float32), overhead_bits, best_alpha

@@ -1,0 +1,122 @@
+"""Fault-tolerant checkpointing.
+
+Design (numpy .npz per step, no external deps):
+  * atomic: write to <dir>/tmp.<step>.<pid>, fsync, rename — a crash mid-write
+    can never corrupt the latest checkpoint;
+  * keep-N GC with a protected "milestone" stride;
+  * resume: ``latest_step()`` scans the directory, ``restore`` rebuilds the
+    pytree from the saved treedef;
+  * **elastic re-mesh**: arrays are saved as host (fully-replicated) numpy, so
+    ``restore(..., sharding_fn)`` can place them onto ANY mesh — changing pod
+    count / mesh shape between runs re-shards transparently (tested in
+    tests/test_checkpoint.py);
+  * async mode: the serialize+write happens on a background thread, with a
+    barrier before the next save (overlap checkpoint I/O with compute).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> tuple[list[tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = [f"leaf_{i}" for i in range(len(leaves))]
+    return list(zip(keys, leaves)), treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, milestone_every: int = 0,
+                 async_write: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.milestone_every = milestone_every
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- paths
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:010d}.npz")
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".npz"):
+                try:
+                    steps.append(int(f[5:-4]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -------------------------------------------------------------- save
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any, extra: dict | None = None) -> None:
+        """Serialize pytree (device -> host) and write atomically."""
+        self.wait()
+        named, treedef = _flatten_with_paths(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in named}
+        meta = {"step": step, "treedef": str(treedef),
+                "extra": extra or {}, "time": time.time()}
+
+        def _write():
+            tmp = os.path.join(self.dir, f"tmp.{step}.{os.getpid()}")
+            with open(tmp, "wb") as f:
+                np.savez(f, __meta__=json.dumps(meta), **host)
+                f.flush()
+                os.fsync(f.fileno())
+            os.rename(tmp, self._path(step))
+            self._gc()
+
+        if self.async_write:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        protected = set(steps[-self.keep:])
+        if self.milestone_every:
+            protected |= {s for s in steps if s % self.milestone_every == 0}
+        for s in steps:
+            if s not in protected:
+                try:
+                    os.remove(self._path(s))
+                except OSError:
+                    pass
+
+    # ------------------------------------------------------------ restore
+    def restore(self, step: int, like: Any,
+                sharding_fn: Optional[Callable[[Any], Any]] = None
+                ) -> tuple[Any, dict]:
+        """Rebuild the pytree of ``like``'s structure from checkpoint ``step``.
+
+        ``sharding_fn(leaf_host_array, like_leaf) -> placed array`` lets the
+        caller place each leaf on an arbitrary mesh (elastic re-mesh).
+        """
+        with np.load(self._path(step), allow_pickle=False) as z:
+            meta = json.loads(str(z["__meta__"]))
+            leaves_like, treedef = jax.tree.flatten(like)
+            out = []
+            for i, ll in enumerate(leaves_like):
+                arr = z[f"leaf_{i}"]
+                if sharding_fn is not None:
+                    out.append(sharding_fn(arr, ll))
+                else:
+                    out.append(jax.numpy.asarray(arr))
+            return jax.tree.unflatten(treedef, out), meta["extra"]

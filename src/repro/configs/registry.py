@@ -1,0 +1,37 @@
+"""--arch registry: id -> ModelConfig (full + tiny smoke variant)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "internlm2-1.8b": "internlm2_1_8b",
+    "llama3.2-3b": "llama3_2_3b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "yi-34b": "yi_34b",
+    "rwkv6-3b": "rwkv6_3b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "whisper-large-v3": "whisper_large_v3",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    # the paper's own family (bonus, not part of the assigned 40-cell matrix)
+    "llama2-7b": "llama2_7b",
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if k != "llama2-7b")
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_tiny(arch: str) -> ModelConfig:
+    return _module(arch).TINY

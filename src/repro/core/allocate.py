@@ -1,0 +1,145 @@
+"""AllocateBits (paper §4, Alg. 4): optimal layer-wise bit allocation.
+
+Minimize  sum_k alpha_k * 2^{-b_k}   s.t.   sum_k b_k * m_k <= R,  b_k in B,
+
+solved exactly by dynamic programming over the budget axis after dividing all
+m_k and R by g = gcd(m_1..m_L, R) — the paper's divide-by-GCD trick, which is
+what makes the DP table small enough (R/g ~ 1e5) to solve in seconds on host.
+
+Everything here is host-side numpy: allocation happens once per model, before
+quantization, and its output (a python list of ints) is static metadata.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+__all__ = ["AllocationResult", "allocate_bits", "allocate_for_avg_bits",
+           "brute_force_allocate"]
+
+# Above this many DP budget slots we coarsen the budget unit and accept a
+# sub-1-slot rounding of R (documented safeguard; never triggers when layer
+# sizes share a large gcd, which the paper notes is the common LLM case).
+_MAX_SLOTS = 4_000_000
+
+
+@dataclass(frozen=True)
+class AllocationResult:
+    bits: list[int]          # chosen b_k per layer
+    total_bits: int          # sum b_k * m_k actually used
+    budget: int              # requested R
+    objective: float         # sum alpha_k 2^{-b_k}
+    gcd: int                 # the g actually used by the DP
+    n_slots: int             # R // g
+
+    @property
+    def avg_bits(self) -> float:
+        return self.total_bits / max(1, self._total_params)
+
+    _total_params: int = 0
+
+
+def _gcd_many(vals: Sequence[int]) -> int:
+    g = 0
+    for v in vals:
+        g = math.gcd(g, int(v))
+    return max(g, 1)
+
+
+def allocate_for_avg_bits(alphas: Sequence[float], m: Sequence[int],
+                          avg_bits: float, bit_choices: Sequence[int]
+                          ) -> AllocationResult:
+    """Convenience wrapper: budget R = avg_bits * total params (floored)."""
+    r = int(math.floor(avg_bits * sum(int(x) for x in m)))
+    return allocate_bits(alphas, m, r, bit_choices)
+
+
+def allocate_bits(alphas: Sequence[float], m: Sequence[int], budget: int,
+                  bit_choices: Sequence[int]) -> AllocationResult:
+    """Exact DP solve of the bit-allocation integer program (Alg. 4)."""
+    alphas = np.asarray(alphas, dtype=np.float64)
+    m = np.asarray(m, dtype=np.int64)
+    bits = sorted(int(b) for b in set(bit_choices))
+    num_layers = len(m)
+    if num_layers == 0:
+        raise ValueError("no layers to allocate")
+    if alphas.shape[0] != num_layers:
+        raise ValueError("alphas and m must have the same length")
+    if budget < bits[0] * int(m.sum()):
+        raise ValueError(
+            f"budget {budget} below the minimum {bits[0] * int(m.sum())} "
+            f"(every layer at {bits[0]} bits)")
+
+    g = _gcd_many(list(m) + [budget])
+    n_slots = budget // g
+    if n_slots > _MAX_SLOTS:                       # coarsen (safeguard)
+        factor = int(math.ceil(n_slots / _MAX_SLOTS))
+        g *= factor
+        n_slots = budget // g
+
+    costs = np.empty((num_layers, len(bits)), dtype=np.int64)  # slots per (k, b)
+    for j, b in enumerate(bits):
+        # round-to-nearest slot count, as in Alg. 4:  floor(m_k b / g + 1/2)
+        costs[:, j] = (m * b + g // 2) // g
+
+    inf = np.inf
+    f = np.full(n_slots + 1, inf)
+    f[0] = 0.0
+    choice = np.zeros((num_layers, n_slots + 1), dtype=np.int8)
+    err = (alphas[:, None] * np.exp2(-np.asarray(bits, dtype=np.float64))[None, :])
+
+    for k in range(num_layers):
+        newf = np.full(n_slots + 1, inf)
+        ch = np.zeros(n_slots + 1, dtype=np.int8)
+        for j in range(len(bits)):
+            ckj = int(costs[k, j])
+            if ckj > n_slots:
+                continue
+            cand = np.full(n_slots + 1, inf)
+            cand[ckj:] = f[: n_slots + 1 - ckj] + err[k, j]
+            better = cand < newf
+            newf = np.where(better, cand, newf)
+            ch = np.where(better, np.int8(j), ch)
+        f = newf
+        choice[k] = ch
+
+    if not np.isfinite(f).any():
+        raise ValueError("infeasible allocation (budget too tight after rounding)")
+    r = int(np.argmin(f))
+    objective = float(f[r])
+    picked = []
+    for k in range(num_layers - 1, -1, -1):
+        j = int(choice[k, r])
+        picked.append(bits[j])
+        r -= int(costs[k, j])
+    picked.reverse()
+    total_bits = int(np.sum(np.asarray(picked, dtype=np.int64) * m))
+    res = AllocationResult(bits=picked, total_bits=total_bits, budget=budget,
+                           objective=objective, gcd=g, n_slots=n_slots)
+    object.__setattr__(res, "_total_params", int(m.sum()))
+    return res
+
+
+def brute_force_allocate(alphas, m, budget, bit_choices) -> AllocationResult:
+    """Exponential exhaustive reference for tests (small L only)."""
+    import itertools
+    alphas = list(map(float, alphas))
+    m = list(map(int, m))
+    best, best_obj = None, np.inf
+    for combo in itertools.product(sorted(set(bit_choices)), repeat=len(m)):
+        if sum(b * mk for b, mk in zip(combo, m)) > budget:
+            continue
+        obj = sum(a * 2.0 ** (-b) for a, b in zip(alphas, combo))
+        if obj < best_obj:
+            best, best_obj = combo, obj
+    if best is None:
+        raise ValueError("infeasible")
+    res = AllocationResult(bits=list(best),
+                           total_bits=sum(b * mk for b, mk in zip(best, m)),
+                           budget=budget, objective=best_obj, gcd=1,
+                           n_slots=budget)
+    object.__setattr__(res, "_total_params", int(sum(m)))
+    return res

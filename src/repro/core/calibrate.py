@@ -1,0 +1,96 @@
+"""Few-shot / zero-shot calibration (paper §4.2, eq. 23).
+
+Per linear layer k we need three Frobenius norms:
+
+    alpha_k = (1/sqrt(d_k)) * ||df/dH^(k)||_F * ||X^(k)||_F * ||W^(k)||_F
+
+``df/dH`` is obtained *exactly* by differentiating the loss w.r.t. an additive
+zero perturbation injected at each linear output (the LinearCtx mechanism in
+repro.models.common); ||X|| and per-input-dim column norms (for the outlier
+trick) come from the same pass's taps.  Calibration always runs the model in
+unrolled mode — 5 samples (few-shot) or 1 synthetic sentence (zero-shot), a
+handful of backward passes, exactly the paper's cost profile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import LinearCtx
+
+# The paper's zero-shot sentence (§4.2), repeated 100x.
+ZERO_SHOT_SENTENCE = ("The curious fox leaped over the quiet stream, its "
+                      "reflection rippling in the golden afternoon light. ")
+
+
+@dataclasses.dataclass
+class LayerStat:
+    name: str
+    d: int
+    c: int
+    m: int                    # parameter count (per-layer; grouped: E*d*c)
+    alpha: float              # eq. 23 sensitivity
+    x_col_sq: np.ndarray      # (d,) accumulated input column energy
+    grouped: bool = False
+    n_groups: int = 1
+
+
+def zero_shot_tokens(vocab: int, seq_len: int, repeats: int = 100) -> np.ndarray:
+    """Byte-tokenized synthetic sentence (valid for any vocab >= 256)."""
+    raw = (ZERO_SHOT_SENTENCE * repeats).encode("utf-8")
+    toks = np.frombuffer(raw, dtype=np.uint8).astype(np.int32)
+    if vocab < 256:
+        toks = toks % vocab
+    reps = -(-(seq_len + 1) // len(toks))
+    return np.tile(toks, reps)[: seq_len + 1][None, :]
+
+
+def calibrate(loss_with_ctx: Callable[[dict, dict, LinearCtx], jax.Array],
+              params: dict, batches: list[dict]) -> dict[str, LayerStat]:
+    """Estimate LayerStats over calibration batches.
+
+    ``loss_with_ctx(params, batch, ctx)`` must run the model UNROLLED and
+    route every linear through the ctx (models.transformer.loss_fn with
+    scan=False does).
+    """
+    stats: dict[str, dict] = {}
+    for batch in batches:
+        # pass 1: taps (shapes + norms)
+        ctx = LinearCtx(collect=True)
+        _ = loss_with_ctx(params, batch, ctx)
+        taps = {k: jax.tree.map(
+            lambda v: np.asarray(v) if isinstance(v, jax.Array) else v, t)
+            for k, t in ctx.taps.items()}
+        # pass 2: grads w.r.t. output perturbations
+        perturb0 = {k: jnp.zeros(t["h_shape"], jnp.float32)
+                    for k, t in taps.items()}
+
+        def loss_of_perturb(pert):
+            return loss_with_ctx(params, batch, LinearCtx(perturb=pert))
+
+        grads = jax.grad(loss_of_perturb)(perturb0)
+        for name, tap in taps.items():
+            g_fro = float(jnp.linalg.norm(grads[name].astype(jnp.float32)))
+            x_fro = float(np.sqrt(tap["x_fro_sq"]))
+            w_fro = float(tap["w_fro"])
+            d = int(tap["d"])
+            alpha = g_fro * x_fro * w_fro / np.sqrt(d)
+            s = stats.setdefault(name, dict(
+                alpha_sum=0.0, n=0, x_col_sq=np.zeros((d,), np.float64),
+                d=d, c=int(tap["c"]), grouped=bool(tap.get("grouped", False)),
+                n_groups=int(tap.get("n_groups", 1))))
+            s["alpha_sum"] += alpha
+            s["n"] += 1
+            s["x_col_sq"] += np.asarray(tap["x_col_sq"], np.float64)
+    out = {}
+    for name, s in stats.items():
+        m = s["d"] * s["c"] * s["n_groups"]
+        out[name] = LayerStat(name=name, d=s["d"], c=s["c"], m=m,
+                              alpha=s["alpha_sum"] / max(s["n"], 1),
+                              x_col_sq=s["x_col_sq"], grouped=s["grouped"],
+                              n_groups=s["n_groups"])
+    return out

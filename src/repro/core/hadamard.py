@@ -1,0 +1,162 @@
+"""Fast Walsh-Hadamard transform + the paper's practical RHT (App. A.1 / C.2).
+
+TPU-native design note (DESIGN.md §3): instead of a log(d) butterfly (VPU-bound,
+layout-hostile on TPU), we use the Kronecker factorization
+
+    H_{d1*d2} = H_{d1} (x) H_{d2}
+
+so a length-d FWHT is a reshape to (d1, d2) plus two *dense matmuls* with small
+Hadamard matrices (d1, d2 <= 256) — exactly the shape the MXU wants.  The
+Pallas kernel (repro/kernels/hadamard) keeps the tile in VMEM for both
+contractions; this module is the pure-jnp implementation used as oracle and as
+the CPU/dry-run path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "hadamard_matrix",
+    "fwht",
+    "rht",
+    "rht_inverse",
+    "practical_rht",
+    "practical_rht_inverse",
+    "rademacher",
+    "largest_pow2_leq",
+]
+
+
+def largest_pow2_leq(d: int) -> int:
+    """2 ** floor(log2(d))  (paper App. C.2: d_hat)."""
+    if d < 1:
+        raise ValueError(f"dimension must be >= 1, got {d}")
+    return 1 << (d.bit_length() - 1)
+
+
+@functools.lru_cache(maxsize=None)
+def _hadamard_np(d: int) -> np.ndarray:
+    """Unnormalized Sylvester Hadamard matrix H_d (d a power of 2)."""
+    if d & (d - 1):
+        raise ValueError(f"Hadamard matrix only defined for powers of 2, got {d}")
+    h = np.array([[1.0]], dtype=np.float32)
+    while h.shape[0] < d:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def hadamard_matrix(d: int, dtype=jnp.float32) -> jax.Array:
+    """Normalized (orthonormal, involutory) Hadamard matrix H_d / sqrt(d)."""
+    return jnp.asarray(_hadamard_np(d) / math.sqrt(d), dtype=dtype)
+
+
+def _split_dim(d: int) -> tuple[int, int]:
+    """Balanced factorization d = d1 * d2 with both powers of 2, d1 >= d2.
+
+    Factors are capped at 256 only implicitly (balanced split of d <= 2^16
+    yields <= 256); matmul with a 256x256 H is still cheap.
+    """
+    lg = d.bit_length() - 1
+    d1 = 1 << ((lg + 1) // 2)
+    d2 = d // d1
+    return d1, d2
+
+
+def fwht(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Normalized fast Walsh-Hadamard transform along ``axis``.
+
+    Length along ``axis`` must be a power of 2.  Orthonormal and involutory:
+    ``fwht(fwht(x)) == x``.
+    """
+    axis = axis % x.ndim
+    d = x.shape[axis]
+    if d & (d - 1):
+        raise ValueError(f"fwht requires a power-of-2 length, got {d}")
+    if d == 1:
+        return x
+    x = jnp.moveaxis(x, axis, -1)
+    lead = x.shape[:-1]
+    d1, d2 = _split_dim(d)
+    # row-major pairing: index i in [0,d) <-> (i1, i2), i1 slow => H_d = H_d1 (x) H_d2
+    xr = x.reshape(*lead, d1, d2)
+    h1 = hadamard_matrix(d1, x.dtype)
+    h2 = hadamard_matrix(d2, x.dtype)
+    xr = jnp.einsum("...ij,jk->...ik", xr, h2)
+    xr = jnp.einsum("...ij,ia->...aj", xr, h1)
+    x = xr.reshape(*lead, d)
+    return jnp.moveaxis(x, -1, axis)
+
+
+def rademacher(key: jax.Array, d: int, dtype=jnp.float32) -> jax.Array:
+    """i.i.d. +/-1 vector of length d."""
+    return (jax.random.bernoulli(key, 0.5, (d,)).astype(dtype) * 2.0 - 1.0)
+
+
+def rht(x: jax.Array, signs: jax.Array, axis: int = -1) -> jax.Array:
+    """Randomized Hadamard transform: x -> Hadamard(D x) (paper eq. 8)."""
+    axis = axis % x.ndim
+    shape = [1] * x.ndim
+    shape[axis] = x.shape[axis]
+    return fwht(x * signs.reshape(shape).astype(x.dtype), axis=axis)
+
+
+def rht_inverse(y: jax.Array, signs: jax.Array, axis: int = -1) -> jax.Array:
+    """Inverse of ``rht``: x = D Hadamard(y)  (H orthonormal involution)."""
+    axis = axis % x_ndim(y)
+    shape = [1] * y.ndim
+    shape[axis] = y.shape[axis]
+    return fwht(y, axis=axis) * signs.reshape(shape).astype(y.dtype)
+
+
+def x_ndim(x) -> int:
+    return x.ndim
+
+
+def _apply_block(x: jax.Array, signs: jax.Array, axis: int, start: int, d_hat: int,
+                 inverse: bool) -> jax.Array:
+    """Apply (inverse) RHT to the slice [start, start+d_hat) along ``axis``."""
+    sl = [slice(None)] * x.ndim
+    sl[axis] = slice(start, start + d_hat)
+    sl = tuple(sl)
+    blk = x[sl]
+    blk = rht_inverse(blk, signs, axis) if inverse else rht(blk, signs, axis)
+    return x.at[sl].set(blk)
+
+
+def practical_rht(x: jax.Array, signs1: jax.Array, signs2: jax.Array | None,
+                  axis: int = -1) -> jax.Array:
+    """Practical RHT for arbitrary dimension d (paper Alg. 5).
+
+    d_hat = 2^floor(log2 d); RHT the first d_hat coords with D1, then the last
+    d_hat coords with D2 (overlap is transformed twice; composition of
+    orthogonal maps => inner products along ``axis`` are preserved exactly).
+    When d is a power of 2 a single application suffices (signs2 may be None).
+    """
+    axis = axis % x.ndim
+    d = x.shape[axis]
+    d_hat = largest_pow2_leq(d)
+    x = _apply_block(x, signs1, axis, 0, d_hat, inverse=False)
+    if d_hat != d:
+        if signs2 is None:
+            raise ValueError("signs2 required when d is not a power of 2")
+        x = _apply_block(x, signs2, axis, d - d_hat, d_hat, inverse=False)
+    return x
+
+
+def practical_rht_inverse(y: jax.Array, signs1: jax.Array,
+                          signs2: jax.Array | None, axis: int = -1) -> jax.Array:
+    """Exact inverse of ``practical_rht`` (reverse order, inverse blocks)."""
+    axis = axis % y.ndim
+    d = y.shape[axis]
+    d_hat = largest_pow2_leq(d)
+    if d_hat != d:
+        if signs2 is None:
+            raise ValueError("signs2 required when d is not a power of 2")
+        y = _apply_block(y, signs2, axis, d - d_hat, d_hat, inverse=True)
+    y = _apply_block(y, signs1, axis, 0, d_hat, inverse=True)
+    return y

@@ -1,0 +1,51 @@
+"""Bit-packing of RaBitQ codes.
+
+Codes are stored packed along the d (input/contraction) axis:
+  * bits in {1, 2, 4, 8}: dense — 8 // bits codes per uint8,
+  * bits in {3, 5, 6, 7}: byte-aligned physically, counted at b logical bits
+    for budget purposes (paper counts logical bits; physical density for
+    non-power-of-2 widths is a storage-format detail orthogonal to the method).
+
+The packed layout is what the qmatmul Pallas kernel consumes: codes travel
+HBM -> VMEM packed and are unpacked in-register next to the MXU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pack_codes", "unpack_codes", "packed_rows", "DENSE_BITS"]
+
+DENSE_BITS = (1, 2, 4, 8)
+
+
+def packed_rows(d: int, bits: int) -> int:
+    if bits not in DENSE_BITS:
+        return d
+    per = 8 // bits
+    return (d + per - 1) // per
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack (d, c) uint8 codes -> (packed_rows(d, bits), c) uint8."""
+    if bits not in DENSE_BITS or bits == 8:
+        return codes.astype(jnp.uint8)
+    per = 8 // bits
+    d, c = codes.shape
+    pad = (-d) % per
+    if pad:
+        codes = jnp.concatenate([codes, jnp.zeros((pad, c), codes.dtype)], axis=0)
+    grp = codes.reshape(-1, per, c).astype(jnp.uint8)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits)[None, :, None]
+    return jnp.sum(grp << shifts, axis=1).astype(jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array, bits: int, d: int) -> jax.Array:
+    """Inverse of ``pack_codes`` -> (d, c) uint8."""
+    if bits not in DENSE_BITS or bits == 8:
+        return packed
+    per = 8 // bits
+    mask = jnp.uint8((1 << bits) - 1)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits)[None, :, None]
+    grp = (packed[:, None, :] >> shifts) & mask
+    return grp.reshape(-1, packed.shape[-1])[:d]

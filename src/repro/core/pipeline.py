@@ -1,0 +1,258 @@
+"""End-to-end RaanA pipeline (paper Alg. 1): calibrate -> AllocateBits ->
+RaBitQ-H quantize -> deployable quantized param tree.
+
+Two entry points:
+
+  * ``quantize_model``          — the real pipeline: per-layer heterogeneous
+    bit-widths from the DP allocator, outlier/centralization tricks, emits an
+    unrolled ("layers" as python lists) quantized tree.
+  * ``quantize_params_uniform`` — uniform-bit, trick-light variant that maps
+    stacked layer trees to stacked QuantizedLinear leaves, preserving
+    scan-over-layers (used by the multi-pod dry-run and large-scale serving;
+    per-stack-position bit choice still allowed).
+
+Weight categories (DESIGN.md §4): transformer-block 2-D projections and MoE
+expert stacks are quantized; embeddings/lm_head, norms, routers, RWKV
+token-shift/decay LoRAs, RG-LRU gate block-diagonals, conv filters, and
+DeepSeek's wkv_b (needed in expanded form by the absorbed MLA decode) stay
+in full precision.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+from . import allocate as alloc
+from .calibrate import LayerStat
+from .qlinear import (QuantizedGrouped, QuantizedLinear, quantize_grouped,
+                      quantize_linear)
+
+QUANTIZABLE_2D = {"wq", "wk", "wv", "wo", "wi", "swi", "swo", "ck", "cv",
+                  "cr", "wr", "wg", "wq_a", "wq_b", "wkv_a"}
+GROUPED_KEYS = {"wi", "wo"}
+
+
+def _walk_layer(lp: dict, prefix: tuple = ()):
+    """Yield (path, kind) for quantizable leaves of ONE layer's param dict."""
+    for k, v in lp.items():
+        path = prefix + (k,)
+        if isinstance(v, dict):
+            yield from _walk_layer(v, path)
+        elif hasattr(v, "ndim"):
+            if (len(path) >= 2 and path[-2] == "moe" and k in GROUPED_KEYS
+                    and v.ndim == 3):
+                yield path, "grouped"
+            elif k in QUANTIZABLE_2D and v.ndim == 2 and min(v.shape) >= 8:
+                yield path, "linear"
+
+
+def _get(d: dict, path):
+    for k in path:
+        d = d[k]
+    return d
+
+
+def _set(d: dict, path, val):
+    for k in path[:-1]:
+        d = d[k]
+    d[path[-1]] = val
+
+
+@dataclass
+class QuantReport:
+    per_layer_bits: dict[str, int]
+    avg_bits: float
+    requested_avg_bits: float
+    total_param_bits: int
+    overhead_bits: int
+    objective: float
+    wall_time_s: float
+    n_layers: int
+
+
+def _overhead_bits_estimate(kind: str, shape, outlier_frac: float,
+                            centralize: bool) -> int:
+    """Side-info bits: rescale + signs + mean col + outlier rows/indices."""
+    if kind == "grouped":
+        e, d, c = shape
+        return 16 * e * c + 2 * d
+    d, c = shape
+    k = int(np.ceil(outlier_frac * d)) if outlier_frac > 0 else 0
+    bits = 16 * c + 2 * d                    # rescale + signs (both blocks)
+    if centralize:
+        bits += 16 * d
+    bits += k * (16 * c + 32)
+    return bits
+
+
+def quantize_model(cfg: ModelConfig, params: dict,
+                   stats: dict[str, LayerStat], avg_bits: float,
+                   key: jax.Array, bit_choices=(1, 2, 3, 4, 5, 6, 7, 8),
+                   outlier_frac: float = 0.003, centralize: bool = True,
+                   n_candidates: int = 12):
+    """Full RaanA: returns (quantized params tree, QuantReport)."""
+    t0 = time.time()
+    pat, p_period = cfg.pattern, cfg.scan_period
+
+    entries = []  # (name, jpos, idx, path, kind, shape)
+
+    def collect(scope: str, stack_list, n_layers, pat_fn):
+        for i in range(n_layers):
+            jpos, idx = i % p_period, i // p_period
+            if scope == "enc":
+                jpos, idx = 0, i
+            lp = (stack_list[jpos][idx] if isinstance(stack_list[jpos], list)
+                  else jax.tree.map(lambda a: a[idx], stack_list[jpos]))
+            for path, kind in _walk_layer(lp):
+                w = _get(lp, path)
+                name = f"{scope}{i}." + ".".join(path)
+                entries.append((name, scope, jpos, idx, path, kind,
+                                tuple(w.shape)))
+
+    collect("L", params["layers"], cfg.n_layers, pat)
+    if cfg.enc_dec:
+        collect("enc", params["enc_layers"], cfg.n_enc_layers, None)
+
+    ms, alphas, overheads = [], [], []
+    for (name, scope, jpos, idx, path, kind, shape) in entries:
+        m = int(np.prod(shape))
+        st = stats.get(name)
+        if st is None:
+            alpha = float(np.sqrt(m))            # weight-only fallback
+        else:
+            alpha = max(st.alpha, 1e-12)
+        ms.append(m)
+        alphas.append(alpha)
+        overheads.append(_overhead_bits_estimate(kind, shape, outlier_frac,
+                                                 centralize))
+    total_m = int(sum(ms))
+    budget = int(np.floor(avg_bits * total_m)) - int(sum(overheads))
+    allocation = alloc.allocate_bits(alphas, ms, budget, bit_choices)
+
+    # ---- quantize, building unrolled per-layer lists ----
+    def unroll(stacks, n_layers, scope):
+        lists = [[] for _ in range(p_period if scope == "L" else 1)]
+        for i in range(n_layers):
+            jpos, idx = (i % p_period, i // p_period) if scope == "L" else (0, i)
+            lp = (stacks[jpos][idx] if isinstance(stacks[jpos], list)
+                  else jax.tree.map(lambda a: a[idx], stacks[jpos]))
+            lists[jpos].append(jax.tree.map(lambda a: a, lp))  # shallow copy
+        return lists
+
+    qparams = dict(params)
+    qparams["layers"] = unroll(params["layers"], cfg.n_layers, "L")
+    if cfg.enc_dec:
+        qparams["enc_layers"] = unroll(params["enc_layers"],
+                                       cfg.n_enc_layers, "enc")
+
+    per_layer_bits: dict[str, int] = {}
+    used_bits = 0
+    overhead_used = 0
+    for (name, scope, jpos, idx, path, kind, shape), bits in zip(
+            entries, allocation.bits):
+        target = (qparams["layers"][jpos][idx] if scope == "L"
+                  else qparams["enc_layers"][0][idx])
+        w = _get(target, path)
+        key, sub = jax.random.split(key)
+        if kind == "grouped":
+            q = quantize_grouped(w, bits, sub, n_candidates=n_candidates)
+            overhead_used += 16 * q.rescale.size + q.signs1.size + (
+                q.signs2.size if q.signs2 is not None else 0)
+        else:
+            st = stats.get(name)
+            x_col = (np.sqrt(np.maximum(st.x_col_sq, 0.0))
+                     if st is not None else None)
+            q = quantize_linear(w, bits, sub, x_col_norms=x_col,
+                                outlier_frac=outlier_frac if x_col is not None
+                                else 0.0,
+                                centralize=centralize,
+                                n_candidates=n_candidates)
+            overhead_used += q.overhead_bits()
+        _set(target, path, q)
+        per_layer_bits[name] = bits
+        used_bits += bits * int(np.prod(shape))
+
+    report = QuantReport(
+        per_layer_bits=per_layer_bits,
+        avg_bits=(used_bits + overhead_used) / total_m,
+        requested_avg_bits=avg_bits,
+        total_param_bits=used_bits,
+        overhead_bits=overhead_used,
+        objective=allocation.objective,
+        wall_time_s=time.time() - t0,
+        n_layers=len(entries))
+    return qparams, report
+
+
+# ------------------------------------------------- uniform / dry-run variant
+
+
+def _quantize_stacked_linear(w: jax.Array, bits: int, key: jax.Array
+                             ) -> QuantizedLinear:
+    """(n, d, c) stacked weights -> QuantizedLinear with stacked leaves
+    (sliceable by scan via tree.map(a[i]))."""
+    n, d, c = w.shape
+    keys = jax.random.split(key, n)
+    qs = [quantize_linear(w[i], bits, keys[i], x_col_norms=None,
+                          outlier_frac=0.0, centralize=True, n_candidates=8)
+          for i in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *qs)
+
+
+def _quantize_stacked_grouped(w: jax.Array, bits: int, key: jax.Array
+                              ) -> QuantizedGrouped:
+    n = w.shape[0]
+    keys = jax.random.split(key, n)
+    qs = [quantize_grouped(w[i], bits, keys[i], n_candidates=8)
+          for i in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *qs)
+
+
+def quantize_params_uniform(cfg: ModelConfig, params: dict, bits: int,
+                            key: jax.Array) -> dict:
+    """Uniform-bit quantization preserving stacked (scannable) layout.
+
+    Works under jax.eval_shape (no data-dependent control flow), which is how
+    the dry-run lowers the quantized serve path without materializing 100s of
+    GB of weights.
+    """
+    qparams = dict(params)
+
+    def do_stacks(stacks):
+        out = []
+        for st in stacks:
+            st = jax.tree.map(lambda a: a, st)  # shallow structural copy
+
+            def rec(d: dict, prefix=()):
+                for k in list(d.keys()):
+                    v = d[k]
+                    path = prefix + (k,)
+                    if isinstance(v, dict):
+                        rec(v, path)
+                    elif hasattr(v, "ndim"):
+                        nonlocal key
+                        if (len(path) >= 2 and path[-2] == "moe"
+                                and k in GROUPED_KEYS and v.ndim == 4):
+                            key, sub = jax.random.split(key)
+                            d[k] = _quantize_stacked_grouped(v, bits, sub)
+                        elif (k in QUANTIZABLE_2D and v.ndim == 3
+                              and min(v.shape[1:]) >= 8):
+                            key, sub = jax.random.split(key)
+                            d[k] = _quantize_stacked_linear(v, bits, sub)
+
+            rec(st)
+            out.append(st)
+        return out
+
+    qparams["layers"] = do_stacks(params["layers"])
+    if cfg.enc_dec:
+        qparams["enc_layers"] = do_stacks(params["enc_layers"])
+    return qparams

@@ -1,0 +1,193 @@
+"""QuantizedLinear — the deployable artifact of RaanA for one linear layer.
+
+Bundles everything Alg. 2 emits (packed codes, rescale r, Rademacher signs)
+plus the App. C.3 trick state (mean column s, outlier rows) and applies
+Alg. 3 at inference.  Registered as a JAX pytree so a quantized model is just
+the original param tree with weight arrays swapped for QuantizedLinear nodes —
+model code calls ``repro.models.common.linear`` which dispatches on type.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hadamard, packing, rabitq, tricks
+
+__all__ = ["QuantizedLinear", "quantize_linear", "reconstruct_weight",
+           "QuantizedGrouped", "quantize_grouped"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedLinear:
+    # --- dynamic leaves ---
+    packed: jax.Array                 # (packed_rows(d_keep), c) uint8
+    rescale: jax.Array                # (c,) f32
+    signs1: jax.Array                 # (d_hat,) f32 (+/-1)
+    signs2: Optional[jax.Array]       # (d_hat,) f32 or None (d_keep a pow2)
+    mean_col: Optional[jax.Array]     # (d_keep,) f32 (centralization) or None
+    w_out: Optional[jax.Array]        # (k, c) fp outlier rows or None
+    out_idx: Optional[jax.Array]      # (k,) int32 or None
+    keep_idx: Optional[jax.Array]     # (d_keep,) int32 or None (k == 0)
+    # --- static metadata ---
+    bits: int = dataclasses.field(metadata=dict(static=True), default=4)
+    d: int = dataclasses.field(metadata=dict(static=True), default=0)
+    d_keep: int = dataclasses.field(metadata=dict(static=True), default=0)
+    c: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def shape(self):  # mimic a weight array's (d, c)
+        return (self.d, self.c)
+
+    @property
+    def dtype(self):
+        return jnp.float32
+
+    def overhead_bits(self) -> int:
+        """Side-information cost in bits (counted against the budget)."""
+        n = self.rescale.size * 16 + self.signs1.size
+        if self.signs2 is not None:
+            n += self.signs2.size
+        if self.mean_col is not None:
+            n += self.mean_col.size * 16
+        if self.w_out is not None:
+            n += self.w_out.size * 16 + self.out_idx.size * 32
+        return int(n)
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        """Estimate x @ W for x of shape (..., d) — Alg. 3 + trick corrections."""
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, self.d).astype(jnp.float32)
+        if self.out_idx is not None and self.out_idx.size:
+            x_out = jnp.take(x2, self.out_idx, axis=1)
+            x_rest = jnp.take(x2, self.keep_idx, axis=1)
+        else:
+            x_out, x_rest = None, x2
+        y = jnp.zeros((x2.shape[0], self.c), jnp.float32)
+        if self.mean_col is not None:
+            y = y + (x_rest @ self.mean_col)[:, None]
+        xr = hadamard.practical_rht(x_rest, self.signs1, self.signs2, axis=-1)
+        from repro.kernels.qmatmul import ops as qops  # late: avoid cycle
+        y = y + qops.quantized_matmul(xr, self.packed, self.rescale,
+                                      bits=self.bits, d=self.d_keep)
+        if x_out is not None:
+            y = y + x_out @ self.w_out.astype(jnp.float32)
+        return y.reshape(*lead, self.c)
+
+
+def quantize_linear(w: jax.Array, bits: int, key: jax.Array,
+                    x_col_norms: np.ndarray | None = None,
+                    outlier_frac: float = 0.003,
+                    centralize: bool = True,
+                    n_candidates: int = 12) -> QuantizedLinear:
+    """Alg. 2 (+ App. C.3 tricks) for one weight matrix (d, c)."""
+    d, c = w.shape
+    w = w.astype(jnp.float32)
+    # 1) column-outlier excluding (input dims by calibrated activation norm)
+    if x_col_norms is not None and outlier_frac > 0:
+        out_idx, keep_idx = tricks.outlier_indices(np.asarray(x_col_norms), outlier_frac)
+    else:
+        out_idx = np.zeros((0,), np.int32)
+        keep_idx = np.arange(d, dtype=np.int32)
+    has_out = out_idx.size > 0
+    w_out, w_rest = (tricks.split_outlier_dims(w, out_idx, keep_idx)
+                     if has_out else (None, w))
+    d_keep = int(keep_idx.size)
+    # 2) centralization
+    if centralize:
+        w_rest, mean_col = tricks.centralize(w_rest)
+    else:
+        mean_col = None
+    # 3) practical RHT along the input axis
+    d_hat = hadamard.largest_pow2_leq(d_keep)
+    k1, k2 = jax.random.split(key)
+    signs1 = hadamard.rademacher(k1, d_hat)
+    signs2 = hadamard.rademacher(k2, d_hat) if d_hat != d_keep else None
+    w_rot = hadamard.practical_rht(w_rest, signs1, signs2, axis=0)
+    # 4) extended RaBitQ
+    q = rabitq.quantize(w_rot, bits, n_candidates=n_candidates)
+    packed = packing.pack_codes(q.codes, bits)
+    return QuantizedLinear(
+        packed=packed, rescale=q.rescale, signs1=signs1, signs2=signs2,
+        mean_col=mean_col, w_out=w_out,
+        out_idx=jnp.asarray(out_idx) if has_out else None,
+        keep_idx=jnp.asarray(keep_idx) if has_out else None,
+        bits=bits, d=d, d_keep=d_keep, c=c)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedGrouped:
+    """Stacked per-expert quantization for MoE weights (E, d, c).
+
+    Signs are shared across experts in a layer (same input space); rescale is
+    per (expert, column).  Tricks (centralization/outliers) are omitted for the
+    grouped form — expert matrices are small and the RHT does the heavy
+    lifting; noted in DESIGN.md.
+    """
+    packed: jax.Array            # (E, packed_rows(d), c) uint8
+    rescale: jax.Array           # (E, c) f32
+    signs1: jax.Array            # (d_hat,)
+    signs2: Optional[jax.Array]
+    bits: int = dataclasses.field(metadata=dict(static=True), default=4)
+    d: int = dataclasses.field(metadata=dict(static=True), default=0)
+    c: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def shape(self):
+        return (self.packed.shape[0], self.d, self.c)
+
+    def apply(self, xbuf: jax.Array) -> jax.Array:
+        """xbuf (E, C, d) -> (E, C, c): per-expert Alg. 3 estimate."""
+        xr = hadamard.practical_rht(xbuf.astype(jnp.float32), self.signs1,
+                                    self.signs2, axis=-1)
+        codes = jax.vmap(lambda p: packing.unpack_codes(p, self.bits, self.d))(
+            self.packed).astype(jnp.float32)                     # (E, d, c)
+        c_b = ((1 << self.bits) - 1) / 2.0
+        y = jnp.einsum("ecd,edf->ecf", xr, codes)
+        z = c_b * jnp.sum(xr, axis=-1, keepdims=True)            # (E, C, 1)
+        return (y - z) * self.rescale[:, None, :]
+
+
+def quantize_grouped(w: jax.Array, bits: int, key: jax.Array,
+                     n_candidates: int = 12) -> QuantizedGrouped:
+    """Quantize stacked expert weights (E, d, c) with shared RHT signs."""
+    e, d, c = w.shape
+    d_hat = hadamard.largest_pow2_leq(d)
+    k1, k2 = jax.random.split(key)
+    signs1 = hadamard.rademacher(k1, d_hat)
+    signs2 = hadamard.rademacher(k2, d_hat) if d_hat != d else None
+    w_rot = hadamard.practical_rht(w.astype(jnp.float32), signs1, signs2, axis=1)
+
+    def quant_one(we):
+        q = rabitq.quantize(we, bits, n_candidates=n_candidates)
+        return packing.pack_codes(q.codes, bits), q.rescale
+
+    packed, rescale = jax.lax.map(quant_one, w_rot)
+    return QuantizedGrouped(packed=packed, rescale=rescale, signs1=signs1,
+                            signs2=signs2, bits=bits, d=d, c=c)
+
+
+def reconstruct_weight(q: QuantizedLinear) -> jax.Array:
+    """Effective W_hat (d, c) implementing exactly the Alg. 3 estimator.
+
+    Lets any unmodified fp forward pass evaluate the quantized model
+    (tests assert apply() == x @ reconstruct_weight()).
+    """
+    codes = packing.unpack_codes(q.packed, q.bits, q.d_keep)
+    c_b = ((1 << q.bits) - 1) / 2.0
+    w_rot = (codes.astype(jnp.float32) - c_b) * q.rescale[None, :]
+    w_rest = hadamard.practical_rht_inverse(w_rot, q.signs1, q.signs2, axis=0)
+    if q.mean_col is not None:
+        w_rest = w_rest + q.mean_col[:, None]
+    if q.out_idx is not None and q.out_idx.size:
+        w_hat = jnp.zeros((q.d, q.c), jnp.float32)
+        w_hat = w_hat.at[q.keep_idx, :].set(w_rest)
+        w_hat = w_hat.at[q.out_idx, :].set(q.w_out.astype(jnp.float32))
+    else:
+        w_hat = w_rest
+    return w_hat

@@ -1,0 +1,53 @@
+"""Pre-quantization tricks (paper App. C.3): invertible linear transforms that
+reduce quantization error without changing the computed product.
+
+Used by default (matching the paper's experimental configuration):
+  * Centralization — subtract the mean column s = mean_j w_j from every column
+    of W before quantizing; the exact correction (X s) 1^T is a cheap matvec
+    at inference.  (Paper describes T on activations; for a weights-offline /
+    activations-online system the weight-side form is the natural equivalent —
+    see DESIGN.md §3.)
+  * Column-outlier excluding — the top ``outlier_frac`` *input dimensions* by
+    calibrated activation column norm bypass quantization: their weight rows
+    are stored in fp16 and applied exactly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Centralized", "centralize", "split_outlier_dims", "outlier_indices"]
+
+
+class Centralized(NamedTuple):
+    w_centered: jax.Array  # (d, c)
+    mean_col: jax.Array    # (d,) the exact mean column s
+
+
+def centralize(w: jax.Array) -> Centralized:
+    s = jnp.mean(w, axis=1)
+    return Centralized(w - s[:, None], s)
+
+
+def outlier_indices(col_norms: np.ndarray, frac: float) -> tuple[np.ndarray, np.ndarray]:
+    """(outlier_idx, keep_idx) — top ``frac`` of input dims by activation norm.
+
+    Host-side (numpy): the split is static metadata baked into the quantized
+    layer.  Indices are sorted ascending so gathers stay cache/vmem friendly.
+    """
+    d = int(col_norms.shape[0])
+    k = int(np.ceil(frac * d)) if frac > 0 else 0
+    if k == 0:
+        return np.zeros((0,), np.int32), np.arange(d, dtype=np.int32)
+    out = np.argsort(col_norms)[::-1][:k]
+    out = np.sort(out).astype(np.int32)
+    keep = np.setdiff1d(np.arange(d, dtype=np.int32), out, assume_unique=True)
+    return out, keep
+
+
+def split_outlier_dims(w: jax.Array, out_idx: np.ndarray, keep_idx: np.ndarray):
+    """Split weight rows into (W_outlier (k, c) fp, W_rest (d', c))."""
+    return w[out_idx, :], w[keep_idx, :]

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for RaanA's compute hot-spots.
+
+Four kernels — three are TPU-native adaptations of stages the paper runs on
+CPU/GPU (DESIGN.md §3), the fourth (flash_attention) is the beyond-paper
+lever identified by EXPERIMENTS.md §Perf:
+
+  * ``hadamard``     — RHT as two MXU matmuls per VMEM-resident tile
+                       (Kronecker-factorized FWHT; Hadacore's tensor-core idea
+                       re-thought for the 128x128 systolic array).
+  * ``qmatmul``      — fused unpack -> dequant -> GEMM with the Alg. 3
+                       rescale/z epilogue; codes cross HBM packed.
+  * ``rabitq_quant`` — per-column candidate-sweep code search + LS rescale.
+
+Every ``ops.py`` wrapper dispatches: real ``pallas_call`` on TPU,
+``interpret=True`` execution in tests, and a pure-jnp reference path for
+large CPU/dry-run work where interpret-mode would be needlessly slow.
+"""
+import jax
+
+
+def default_interpret() -> bool:
+    """True when no TPU is present (CPU container -> interpret mode)."""
+    return jax.default_backend() != "tpu"

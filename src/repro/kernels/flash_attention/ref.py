@@ -1,0 +1,12 @@
+"""Oracle: the (separately validated) chunked-jnp flash attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import flash_attention
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal=True,
+                  window=None) -> jax.Array:
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           q_chunk=128, k_chunk=128)

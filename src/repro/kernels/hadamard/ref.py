@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the RHT kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import hadamard as hcore
+
+
+def rht_ref(x: jax.Array, signs: jax.Array) -> jax.Array:
+    """Hadamard(D x) row-wise for x (n, d), d a power of 2."""
+    return hcore.rht(x, signs, axis=-1)

@@ -1,0 +1,39 @@
+"""Dispatching wrapper for the fused dequant GEMM.
+
+Paths:
+  * TPU          -> real pallas_call (compiled kernel),
+  * tests        -> pallas_call(interpret=True) (bit-exact kernel semantics),
+  * CPU / dryrun -> pure-jnp reference (same math; interpret-mode would be
+                    pointlessly slow inside a 512-way SPMD dry-run compile).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .qmatmul import quantized_matmul_pallas
+from .ref import quantized_matmul_ref
+
+_FORCE_PATH: str | None = None  # "pallas" | "ref" | None (auto) — tests poke this
+
+
+def set_forced_path(path: str | None) -> None:
+    global _FORCE_PATH
+    assert path in (None, "pallas", "ref")
+    _FORCE_PATH = path
+
+
+def quantized_matmul(x: jax.Array, packed: jax.Array, rescale: jax.Array,
+                     *, bits: int, d: int) -> jax.Array:
+    """Estimate X @ (r * (codes - c_b)) for X (..., d) -> (..., c)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    path = _FORCE_PATH
+    if path is None:
+        path = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if path == "pallas":
+        y = quantized_matmul_pallas(x2, packed, rescale, bits=bits, d=d,
+                                    interpret=jax.default_backend() != "tpu")
+    else:
+        y = quantized_matmul_ref(x2, packed, rescale, bits=bits, d=d)
+    return y.reshape(*lead, y.shape[-1])

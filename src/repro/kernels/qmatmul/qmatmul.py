@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: fused unpack -> dequant -> GEMM with Alg. 3 epilogue.
+
+    Y = (X @ (codes - c_b)) * r
+      = (X @ codes) * r - c_b * rowsum(X) * r
+
+Codes arrive packed (8 // bits codes per uint8, packed along the contraction
+axis d) and are unpacked *inside* the kernel, so HBM->VMEM traffic for the
+weights is b/16 of the bf16 baseline — that is the entire point of weight-only
+PTQ at decode time and the term the paper's technique moves (§Roofline).
+
+Blocking: grid (n/bn, c/bc, d/bk), k innermost so the (bn, bc) f32 accumulator
+and the (bn, 1) rowsum scratch live in VMEM across the k sweep; the rescale /
+z-correction epilogue fires on the last k step.  MXU dims (bn, bk, bc) are
+multiples of 128 by construction; the uint8 unpack is a VPU shift/mask on a
+(bk//per, bc) tile broadcast to (bk, bc).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BN = 128
+DEFAULT_BC = 128
+DEFAULT_BK = 512
+
+
+def _kernel(x_ref, packed_ref, rescale_ref, out_ref, acc_ref, zacc_ref,
+            *, bits: int, n_k: int, compute_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        zacc_ref[...] = jnp.zeros_like(zacc_ref)
+
+    x = x_ref[...].astype(compute_dtype)                     # (bn, bk)
+    packed = packed_ref[...]                                 # (bk//per, bc) uint8
+    per = 8 // bits if bits in (1, 2, 4, 8) else 1
+    if per > 1:
+        mask = jnp.uint8((1 << bits) - 1)
+        parts = [((packed >> jnp.uint8(s * bits)) & mask) for s in range(per)]
+        codes = jnp.stack(parts, axis=1).reshape(-1, packed.shape[-1])
+    else:
+        codes = packed
+    codes = codes.astype(compute_dtype)                      # (bk, bc)
+    acc_ref[...] += jnp.dot(x, codes, preferred_element_type=jnp.float32)
+    zacc_ref[...] += jnp.sum(x.astype(jnp.float32), axis=1, keepdims=True)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        c_b = ((1 << bits) - 1) / 2.0
+        r = rescale_ref[...].astype(jnp.float32)             # (1, bc)
+        out_ref[...] = ((acc_ref[...] - c_b * zacc_ref[...]) * r).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "d", "bn", "bc", "bk",
+                                             "interpret", "compute_dtype"))
+def quantized_matmul_pallas(x: jax.Array, packed: jax.Array, rescale: jax.Array,
+                            *, bits: int, d: int,
+                            bn: int = DEFAULT_BN, bc: int = DEFAULT_BC,
+                            bk: int = DEFAULT_BK, interpret: bool = True,
+                            compute_dtype=jnp.float32) -> jax.Array:
+    """x (n, d) f32/bf16, packed (packed_rows, c) uint8, rescale (c,) -> (n, c)."""
+    n, _ = x.shape
+    c = packed.shape[1]
+    per = 8 // bits if bits in (1, 2, 4, 8) else 1
+    assert bk % per == 0 and bk % 128 == 0
+    d_pad = pl.cdiv(d, bk) * bk
+    n_pad = pl.cdiv(n, bn) * bn
+    c_pad = pl.cdiv(c, bc) * bc
+    xp = jnp.zeros((n_pad, d_pad), x.dtype).at[:n, :d].set(x)
+    pp = jnp.zeros((d_pad // per, c_pad), jnp.uint8)
+    pp = pp.at[: packed.shape[0], :c].set(packed)
+    rp = jnp.zeros((1, c_pad), rescale.dtype).at[0, :c].set(rescale)
+    n_k = d_pad // bk
+    grid = (n_pad // bn, c_pad // bc, n_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, n_k=n_k, compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // per, bc), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bc), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bc), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, c_pad), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bn, bc), jnp.float32),   # f32 accumulator
+            pltpu.VMEM((bn, 1), jnp.float32),    # rowsum(X) for the z term
+        ],
+        interpret=interpret,
+    )(xp, pp, rp)
+    return out[:n, :c]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused dequant GEMM (paper Alg. 3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+def quantized_matmul_ref(x: jax.Array, packed: jax.Array, rescale: jax.Array,
+                         *, bits: int, d: int) -> jax.Array:
+    """Y = (X @ (codes - c_b)) * r  for X (n, d), packed codes, r (c,)."""
+    codes = packing.unpack_codes(packed, bits, d).astype(jnp.float32)
+    c_b = ((1 << bits) - 1) / 2.0
+    x = x.astype(jnp.float32)
+    y = x @ codes - c_b * jnp.sum(x, axis=-1, keepdims=True)
+    return y * rescale[None, :].astype(jnp.float32)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the RaBitQ code-search kernel = repro.core.rabitq."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import rabitq
+
+
+def quantize_ref(w: jax.Array, bits: int, n_candidates: int = 12):
+    q = rabitq.quantize(w, bits, n_candidates=n_candidates)
+    return q.codes, q.rescale

@@ -1,0 +1,325 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), record memory_analysis(),
+cost_analysis(), and per-collective byte counts parsed from the optimized
+per-device HLO.  Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>[__qN].json
+— EXPERIMENTS.md §Dry-run / §Roofline tables are generated from these.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only] \
+      [--quant 4] [--force]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cell_applicable, input_specs
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.pipeline import quantize_params_uniform
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode as decmod
+from repro.models import transformer as tf
+from repro.optim import adamw_init
+from repro.runtime import sharding as shd
+from repro.runtime.steps import make_prefill_step, make_serve_step, make_train_step
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip bytes moved by each collective kind (post-partition shapes).
+
+    We count the RESULT shapes on the op line (for all-reduce/all-to-all/
+    collective-permute result == operand; for all-gather the result is the
+    gathered buffer — an upper bound on wire bytes; for reduce-scatter we
+    count the operand = result x group size by scaling with the replica group
+    size when parseable).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+(\w[\w\-]*)\(", s)
+        if not m:
+            continue
+        result_part, opname = m.groups()
+        if opname.endswith("-done"):
+            continue                      # async pair: count the -start only
+        base = opname.removesuffix("-start")
+        if base not in _COLLECTIVES:
+            continue
+        nbytes = _shape_bytes(result_part)
+        if base == "reduce-scatter":
+            g = re.search(r"replica_groups=\{\{([^}]*)\}", s)
+            if g:
+                group = len(g.group(1).split(","))
+                nbytes *= group
+        out[base] += nbytes
+        counts[base] += 1
+    out_total = sum(out.values())
+    return {"bytes_by_kind": out, "counts": counts, "total_bytes": out_total}
+
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def build_cell(arch: str, shape: str, *, multi_pod: bool, quant: int | None,
+               microbatches: int = 4, dtype=jnp.bfloat16,
+               remat_attention: bool = False, seqshard: bool = False,
+               expand_kv: bool = False, shard_kv: bool = False,
+               shard_qkv: bool = False):
+    """Returns (lower_fn, meta) for the cell; lower_fn() -> jax.stages.Lowered."""
+    cfg = get_config(arch)
+    if remat_attention:
+        cfg = cfg.with_(remat_attention=True)
+    if expand_kv:
+        cfg = cfg.with_(expand_kv=True)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    serve = cell.kind != "train"
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime import actsharding
+    actsharding.POLICY.clear()
+    if seqshard:
+        actsharding.POLICY["hidden"] = P(shd.dp_axes(mesh), "model", None)
+    if shard_kv:
+        actsharding.POLICY["kv"] = P(shd.dp_axes(mesh), "model", None, None)
+    if shard_qkv:
+        actsharding.POLICY["qkv"] = P(shd.dp_axes(mesh), None, "model", None)
+
+    params_sds = _abstract(lambda: tf.init_params(cfg, jax.random.PRNGKey(0),
+                                                  dtype=dtype))
+    if quant is not None and serve:
+        params_sds = _abstract(
+            lambda: quantize_params_uniform(
+                cfg, tf.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype),
+                quant, jax.random.PRNGKey(1)))
+    p_specs = shd.named(shd.param_specs(params_sds, mesh, serve=serve), mesh)
+    batch_sds = input_specs(cfg, shape, activation_dtype=dtype)
+    b_specs = shd.named(shd.batch_specs(batch_sds, mesh), mesh)
+
+    if cell.kind == "train":
+        opt_sds = _abstract(adamw_init, params_sds)
+        o_specs = shd.named(shd.param_specs(opt_sds, mesh, serve=False), mesh)
+        step = make_train_step(cfg, microbatches=microbatches)
+
+        def lower():
+            with jax.set_mesh(mesh):
+                return jax.jit(
+                    step,
+                    in_shardings=(p_specs, o_specs, b_specs),
+                    out_shardings=(p_specs, o_specs, None),
+                    donate_argnums=(0, 1),   # params/opt updated in place
+                ).lower(params_sds, opt_sds, batch_sds)
+
+    elif cell.kind == "prefill":
+        step = make_prefill_step(cfg, context=cell.seq_len, cache_dtype=dtype)
+
+        def lower():
+            with jax.set_mesh(mesh):
+                return jax.jit(
+                    step, in_shardings=(p_specs, b_specs), out_shardings=None,
+                ).lower(params_sds, batch_sds)
+
+    else:  # decode
+        b = cell.global_batch
+        enc_out_sds = None
+        if cfg.enc_dec:
+            enc_out_sds = jax.ShapeDtypeStruct(
+                (b, cfg.n_audio_ctx, cfg.d_model), dtype)
+        if enc_out_sds is not None:
+            caches_sds = _abstract(
+                lambda p, e: decmod.init_caches(cfg, p, b, cell.seq_len,
+                                                dtype, encoder_out=e),
+                params_sds, enc_out_sds)
+        else:
+            caches_sds = _abstract(
+                lambda p: decmod.init_caches(cfg, p, b, cell.seq_len, dtype),
+                params_sds)
+        c_specs = shd.named(shd.cache_specs(caches_sds, mesh), mesh)
+        step = make_serve_step(cfg)
+        tok_sds = batch_sds["tokens"]
+        pos_sds = batch_sds["pos"]
+        tok_spec = shd.named(shd.batch_specs({"tokens": tok_sds}, mesh),
+                             mesh)["tokens"]
+
+        def lower():
+            with jax.set_mesh(mesh):
+                return jax.jit(
+                    step,
+                    in_shardings=(p_specs, c_specs, tok_spec, None),
+                    out_shardings=(None, c_specs),
+                    donate_argnums=(1,),     # caches updated in place
+                ).lower(params_sds, caches_sds, tok_sds, pos_sds)
+
+    meta = dict(arch=arch, shape=shape, kind=cell.kind,
+                mesh="2x16x16" if multi_pod else "16x16",
+                chips=512 if multi_pod else 256,
+                seq_len=cell.seq_len, global_batch=cell.global_batch,
+                quant=quant, microbatches=microbatches if cell.kind == "train"
+                else None)
+    return lower, meta
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, quant: int | None,
+             force: bool = False, microbatches: int = 4,
+             save_hlo: bool = False, remat_attention: bool = False,
+             seqshard: bool = False, expand_kv: bool = False,
+             shard_kv: bool = False, shard_qkv: bool = False,
+             variant: str = "") -> dict:
+    os.makedirs(ART_DIR, exist_ok=True)
+    meshname = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape}__{meshname}" + (f"__q{quant}" if quant else "")
+    if variant:
+        tag += f"__{variant}" 
+    path = os.path.join(ART_DIR, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec = dict(arch=arch, shape=shape, mesh=meshname, status="skip",
+                   reason=why, quant=quant)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    t0 = time.time()
+    try:
+        lower_fn, meta = build_cell(arch, shape, multi_pod=multi_pod,
+                                    quant=quant, microbatches=microbatches,
+                                    remat_attention=remat_attention,
+                                    seqshard=seqshard, expand_kv=expand_kv,
+                                    shard_kv=shard_kv, shard_qkv=shard_qkv)
+        meta["variant"] = variant
+        lowered = lower_fn()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        # Loop-aware re-derivation (XLA cost_analysis counts while bodies
+        # once — see launch/hlocost.py). These are the roofline inputs.
+        from repro.launch.hlocost import analyze_hlo
+        corrected = analyze_hlo(hlo)
+        rec = dict(status="ok", **meta,
+                   lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+                   flops=corrected["flops"],
+                   hlo_bytes=corrected["bytes"],
+                   coll_bytes=corrected["coll_bytes"],
+                   coll_by_kind=corrected["coll_by_kind"],
+                   unknown_trip_whiles=corrected["unknown_trip_whiles"],
+                   xla_flops_raw=cost.get("flops", -1.0),
+                   xla_bytes_raw=cost.get("bytes accessed", -1.0),
+                   cost_analysis={k: v for k, v in cost.items()
+                                  if isinstance(v, (int, float))
+                                  and len(k) < 40},
+                   memory=dict(
+                       argument=getattr(mem, "argument_size_in_bytes", 0),
+                       output=getattr(mem, "output_size_in_bytes", 0),
+                       temp=getattr(mem, "temp_size_in_bytes", 0),
+                       peak=getattr(mem, "peak_memory_in_bytes", 0)),
+                   collectives=coll)
+        if save_hlo:
+            with open(os.path.join(ART_DIR, tag + ".hlo"), "w") as f:
+                f.write(hlo)
+    except Exception as e:
+        rec = dict(arch=arch, shape=shape, mesh=meshname, status="error",
+                   quant=quant, error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--quant", type=int, default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--remat-attention", action="store_true")
+    ap.add_argument("--seqshard", action="store_true")
+    ap.add_argument("--expand-kv", action="store_true")
+    ap.add_argument("--shard-kv", action="store_true")
+    ap.add_argument("--shard-qkv", action="store_true")
+    ap.add_argument("--variant", default="")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ([False, True] if args.both_meshes
+              else [bool(args.multi_pod)])
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+    n_ok = n_skip = n_err = 0
+    for a, s, mp in cells:
+        rec = run_cell(a, s, multi_pod=mp, quant=args.quant,
+                       force=args.force, microbatches=args.microbatches,
+                       save_hlo=args.save_hlo,
+                       remat_attention=args.remat_attention,
+                       seqshard=args.seqshard, expand_kv=args.expand_kv,
+                       shard_kv=args.shard_kv, shard_qkv=args.shard_qkv,
+                       variant=args.variant)
+        status = rec["status"]
+        n_ok += status == "ok"
+        n_skip += status == "skip"
+        n_err += status == "error"
+        extra = ""
+        if status == "ok":
+            extra = (f"flops={rec['flops']:.3e} bytes={rec['hlo_bytes']:.3e} "
+                     f"coll={rec['coll_bytes']:.3e} "
+                     f"peak={rec['memory']['peak']/2**30:.2f}GiB "
+                     f"compile={rec['compile_s']}s")
+        elif status == "error":
+            extra = rec["error"][:160]
+        print(f"[{status:5s}] {a} {s} {rec['mesh']}"
+              + (f" q{args.quant}" if args.quant else "") + " " + extra,
+              flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_err} error")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,410 @@
+"""Loop-aware cost analysis of optimized (post-SPMD) HLO text.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` on the CPU backend counts
+every ``while`` body ONCE, regardless of trip count (verified empirically:
+scan of K matmuls reports identical flops for K = 1, 4, 16).  Our production
+programs are scan-heavy — layers, gradient-accumulation microbatches, flash-
+attention KV chunks — so naive cost_analysis under-reports flops/bytes/
+collective traffic by 1-3 orders of magnitude.  This module re-derives the
+three roofline inputs by walking the HLO computation graph and multiplying
+``while`` bodies by their trip counts (parsed from the scan-induced
+``compare(iter, constant(K))`` condition):
+
+  * flops        — 2 * prod(result dims) * prod(contraction dims) per dot
+                   (+ convolutions), MXU-relevant work only;
+  * hbm bytes    — kernel-IO model: every non-trivial op at computation level
+                   (fusions, dots, collectives, copies, reduces) reads its
+                   operands and writes its result; fusion internals excluded
+                   (that is the point of fusion);
+  * collective wire bytes — max(operand, result) per collective instance
+                   (ring all-gather sends ~result bytes, reduce-scatter sends
+                   ~operand bytes, all-reduce/all-to-all/permute symmetric).
+
+All shapes in the partitioned module are per-device, so totals are per-chip.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_ARR_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+                "s4": 1, "u4": 1}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "partition-id", "replica-id", "iota", "rng-bit-generator"}
+
+
+def _arrays(text: str):
+    for dt, dims in _ARR_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        yield dt, n
+
+
+def _nbytes(text: str) -> int:
+    return sum(n * _DTYPE_BYTES[dt] for dt, n in _arrays(text))
+
+
+def _dims(text: str) -> list[int]:
+    m = _ARR_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    result: str          # result type text
+    opcode: str
+    operands: list[str]
+    attrs: str
+    argtext: str = ""    # raw text inside the op's parens
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # %name -> result type text
+
+
+_OP_RE = re.compile(
+    r"^(ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{")
+
+
+def parse_hlo(text: str) -> tuple[dict, str]:
+    """-> ({comp_name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//"):
+            continue
+        mc = _COMP_RE.match(line)
+        if mc and ("->" in line):
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line == "}":
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if not mo:
+            continue
+        is_root, name, result, opcode, rest = mo.groups()
+        # operands: %refs inside the first (...) group — cut at the matching
+        # close paren by scanning
+        depth, i = 1, 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        arg_text = rest[: i - 1]
+        attrs = rest[i:]
+        operands = re.findall(r"%([\w.\-]+)", arg_text)
+        op = Op(name=name, result=result, opcode=opcode, operands=operands,
+                attrs=attrs, argtext=arg_text, is_root=bool(is_root))
+        cur.ops.append(op)
+        cur.shapes[name] = result
+    return comps, entry
+
+
+def _called(attrs: str, key: str) -> str | None:
+    m = re.search(key + r"=%([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_hlo(text)
+        self._memo: dict[str, CostTotals] = {}
+        # per-computation constant table: %name -> int value (from raw text)
+        self._consts: dict[str, int] = {}
+        for m in re.finditer(
+                r"%([\w.\-]+)\s*=\s*s(?:32|64)\[\]\s*constant\((-?\d+)\)",
+                text):
+            self._consts[m.group(1)] = int(m.group(2))
+
+    # -------------------------------------------------------------- trips
+    def _trips(self, cond_name: str) -> tuple[int, bool]:
+        cond = self.comps.get(cond_name)
+        if cond is None:
+            return 1, False
+        vals = [self._consts[op.name] for op in cond.ops
+                if op.opcode == "constant" and op.name in self._consts]
+        # scan condition: iter < K  => trips = K (iter starts at 0)
+        pos = [v for v in vals if v > 0]
+        if pos:
+            return max(pos), True
+        return 1, False
+
+    # --------------------------------------------------------------- dots
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        out = _dims(op.result)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+        lhs_shape = _dims(comp.shapes.get(op.operands[0], ""))
+        contract = 1
+        if m and lhs_shape:
+            for d in m.group(1).split(","):
+                if d:
+                    contract *= lhs_shape[int(d)]
+        n_out = 1
+        for d in out:
+            n_out *= d
+        return 2.0 * n_out * contract
+
+    def _conv_flops(self, comp: Computation, op: Op) -> float:
+        out = _dims(op.result)
+        ker = _dims(comp.shapes.get(op.operands[1], "")) if len(
+            op.operands) > 1 else []
+        n_out = 1
+        for d in out:
+            n_out *= d
+        k = 1
+        for d in ker:
+            k *= d
+        # rough: 2 * output elems * kernel elems / output-channels
+        if ker:
+            k = k // max(ker[-1], 1) if len(ker) >= 2 else k
+        return 2.0 * n_out * max(k, 1)
+
+    # ------------------------------------------------------------ walking
+    def cost(self, comp_name: str | None = None) -> CostTotals:
+        comp_name = comp_name or self.entry
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps[comp_name]
+        t = CostTotals()
+        for op in comp.ops:
+            base = op.opcode.removesuffix("-start").removesuffix("-done")
+            if op.opcode.endswith("-done"):
+                continue
+            if op.opcode == "while":
+                body = _called(op.attrs, "body")
+                cond = _called(op.attrs, "condition")
+                trips, known = self._trips(cond)
+                if not known:
+                    t.unknown_trip_whiles += 1
+                for sub in (body, cond):
+                    if sub and sub in self.comps:
+                        c = self.cost(sub)
+                        t.flops += trips * c.flops
+                        t.bytes += trips * c.bytes
+                        t.coll_bytes += trips * c.coll_bytes
+                        for k, v in c.coll_by_kind.items():
+                            t.coll_by_kind[k] = t.coll_by_kind.get(k, 0) \
+                                + trips * v
+                        t.unknown_trip_whiles += c.unknown_trip_whiles
+                continue
+            if op.opcode == "conditional":
+                branches = re.findall(r"%([\w.\-]+)", op.attrs)
+                subcosts = [self.cost(b) for b in branches
+                            if b in self.comps]
+                if subcosts:
+                    worst = max(subcosts, key=lambda c: c.flops + c.bytes)
+                    t.flops += worst.flops
+                    t.bytes += worst.bytes
+                    t.coll_bytes += worst.coll_bytes
+                continue
+            if op.opcode in ("call",):
+                sub = _called(op.attrs, "to_apply")
+                if sub and sub in self.comps:
+                    c = self.cost(sub)
+                    t.flops += c.flops
+                    t.bytes += c.bytes
+                    t.coll_bytes += c.coll_bytes
+                continue
+            if op.opcode == "fusion":
+                sub = _called(op.attrs, "calls")
+                if sub and sub in self.comps:
+                    t.flops += self._flops_only(sub)
+                op_bytes = self._io_bytes(comp, op)
+                t.bytes += op_bytes
+                continue
+            if base in _COLLECTIVES:
+                in_b = sum(_nbytes(comp.shapes.get(o, ""))
+                           for o in op.operands)
+                out_b = _nbytes(op.result)
+                wire = max(in_b, out_b)
+                t.coll_bytes += wire
+                t.coll_by_kind[base] = t.coll_by_kind.get(base, 0) + wire
+                t.bytes += self._io_bytes(comp, op)
+                continue
+            if op.opcode == "dot":
+                t.flops += self._dot_flops(comp, op)
+                t.bytes += self._io_bytes(comp, op)
+                continue
+            if op.opcode == "convolution":
+                t.flops += self._conv_flops(comp, op)
+                t.bytes += self._io_bytes(comp, op)
+                continue
+            if op.opcode in _SKIP_BYTES or op.opcode == "convert":
+                continue
+            t.bytes += self._io_bytes(comp, op)
+        self._memo[comp_name] = t
+        return t
+
+    def _flops_only(self, comp_name: str) -> float:
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        f = 0.0
+        for op in comp.ops:
+            if op.opcode == "dot":
+                f += self._dot_flops(comp, op)
+            elif op.opcode == "convolution":
+                f += self._conv_flops(comp, op)
+            elif op.opcode == "fusion":
+                sub = _called(op.attrs, "calls")
+                if sub:
+                    f += self._flops_only(sub)
+        return f
+
+    def _io_bytes(self, comp: Computation, op: Op) -> float:
+        """Physical HBM traffic of one kernel-level op.
+
+        Slicing ops touch only the sliced region (XLA reads/writes the
+        window, not the buffer): without this, every scan iteration would be
+        charged the full stacked-params array and every decode step the full
+        KV cache — the dominant source of error in a naive operand+result
+        model.
+        """
+        oc = op.opcode
+        res = _nbytes(op.result)
+        if oc in ("dynamic-slice", "slice", "broadcast", "iota", "reverse"):
+            return float(res)
+        if oc == "dynamic-update-slice":
+            upd = _nbytes(comp.shapes.get(op.operands[1], "")) if len(
+                op.operands) > 1 else 0
+            return float(2 * upd)              # read-modify-write the window
+        if oc == "gather":
+            idx = _nbytes(comp.shapes.get(op.operands[1], "")) if len(
+                op.operands) > 1 else 0
+            return float(2 * res + idx)        # rows read + result written
+        if oc in ("scatter", "scatter-add"):
+            upd = _nbytes(comp.shapes.get(op.operands[-1], ""))
+            idx = _nbytes(comp.shapes.get(op.operands[1], "")) if len(
+                op.operands) > 2 else 0
+            return float(3 * upd + idx)        # read+write window + updates
+        if oc == "fusion":
+            sub = _called(op.attrs, "calls")
+            if self._pure_cast(sub):
+                return 0.0      # TPU: dtype casts fuse into consumers
+            b = self._fusion_result_bytes(sub, float(res))
+            for i, o in enumerate(op.operands):
+                full = _nbytes(comp.shapes.get(o, ""))
+                b += self._fusion_param_bytes(sub, i, full)
+            return b
+        b = float(res)
+        for o in op.operands:
+            b += _nbytes(comp.shapes.get(o, ""))
+        return b
+
+    def _fusion_param_bytes(self, comp_name: str | None, param_idx: int,
+                            full_bytes: float) -> float:
+        """Effective bytes a fused kernel reads from operand ``param_idx``.
+
+        If every use of the parameter inside the fused computation is a
+        slicing op (dynamic-slice / slice / gather) or the *target* of a
+        dynamic-update-slice, only the windows move through HBM."""
+        comp = self.comps.get(comp_name or "")
+        if comp is None:
+            return full_bytes
+        pname = None
+        for o in comp.ops:
+            if o.opcode == "parameter" and o.argtext.strip() == str(param_idx):
+                pname = o.name
+                break
+        if pname is None:
+            return full_bytes
+        # Follow the buffer through layout-transparent ops (bitcast/reshape
+        # produce no traffic of their own) so e.g. bitcast->dynamic-update-
+        # slice chains still count only the window.
+        frontier = {pname}
+        touched = 0.0
+        # TPU semantics: fusion internals never materialize — dtype converts,
+        # copies and layout ops inside a fused kernel are free register moves
+        transparent = ("bitcast", "reshape", "convert", "copy", "transpose",
+                       "broadcast")
+        for o in comp.ops:                      # ops are in topological order
+            hits = [x for x in o.operands if x in frontier]
+            if not hits:
+                continue
+            if o.opcode in transparent:
+                frontier.add(o.name)
+            elif o.opcode in ("dynamic-slice", "slice", "gather"):
+                touched += _nbytes(o.result)
+            elif (o.opcode == "dynamic-update-slice"
+                  and o.operands and o.operands[0] in frontier):
+                upd = _nbytes(comp.shapes.get(o.operands[1], "")) if len(
+                    o.operands) > 1 else 0
+                touched += upd
+                frontier.add(o.name)            # result aliases the buffer
+            else:
+                return full_bytes              # some use reads it fully
+        return min(touched, full_bytes) if touched else full_bytes
+
+    def _pure_cast(self, comp_name: str | None) -> bool:
+        comp = self.comps.get(comp_name or "")
+        if comp is None:
+            return False
+        allowed = {"parameter", "convert", "bitcast", "reshape", "copy",
+                   "constant"}
+        return all(o.opcode in allowed for o in comp.ops)
+
+    def _fusion_result_bytes(self, comp_name: str | None,
+                             full_bytes: float) -> float:
+        """A fusion whose root is a dynamic-update-slice aliases its target
+        buffer and writes only the update window."""
+        comp = self.comps.get(comp_name or "")
+        if comp is None:
+            return full_bytes
+        defs = {o.name: o for o in comp.ops}
+        root = next((o for o in comp.ops if o.is_root), None)
+        # follow transparent root chains
+        seen = 0
+        while root is not None and root.opcode in ("bitcast", "reshape",
+                                                   "copy", "convert") \
+                and seen < 10:
+            root = defs.get(root.operands[0]) if root.operands else None
+            seen += 1
+        if root is not None and root.opcode == "dynamic-update-slice":
+            upd = _nbytes(comp.shapes.get(root.operands[1], "")) if len(
+                root.operands) > 1 else 0
+            return float(upd)
+        return full_bytes
+
+
+def analyze_hlo(text: str) -> dict:
+    hc = HloCost(text)
+    t = hc.cost()
+    return dict(flops=t.flops, bytes=t.bytes, coll_bytes=t.coll_bytes,
+                coll_by_kind=dict(t.coll_by_kind),
+                unknown_trip_whiles=t.unknown_trip_whiles)

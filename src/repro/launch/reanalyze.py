@@ -1,0 +1,38 @@
+"""Re-derive cost fields of every dry-run artifact from its saved .hlo
+(after hlocost refinements) without recompiling.
+
+  PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+import glob
+import json
+import os
+
+from repro.launch.hlocost import analyze_hlo
+from repro.launch.roofline import ART_DIR
+
+
+def main():
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        hpath = jpath[:-5] + ".hlo"
+        if not os.path.exists(hpath):
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        with open(hpath) as f:
+            corrected = analyze_hlo(f.read())
+        rec["flops"] = corrected["flops"]
+        rec["hlo_bytes"] = corrected["bytes"]
+        rec["coll_bytes"] = corrected["coll_bytes"]
+        rec["coll_by_kind"] = corrected["coll_by_kind"]
+        rec["unknown_trip_whiles"] = corrected["unknown_trip_whiles"]
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"re-analyzed {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+  PYTHONPATH=src python -m repro.launch.report [--update-experiments]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import get_config
+from repro.launch import roofline
+
+
+def dryrun_table(mesh: str, quant=None) -> str:
+    rows = [
+        "| arch | shape | status | per-chip FLOPs | per-chip HBM bytes | "
+        "coll bytes | peak mem/chip | compile |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in roofline.load_records(mesh, quant):
+        if r["status"] == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP (sub-quadratic "
+                        f"n/a) | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | — | — | — |"
+                        f" — | — |")
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['flops']:.3e} | "
+            f"{r['hlo_bytes']:.3e} | {r['coll_bytes']:.3e} | "
+            f"{r['memory']['peak']/2**30:.2f} GiB | {r['compile_s']}s |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh: str, quant=None) -> str:
+    rows = [
+        "| arch | shape | T_comp (ms) | T_mem (ms) | T_coll (ms) | dominant |"
+        " MODEL_FLOPS/chip | useful ratio | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in roofline.load_records(mesh, quant):
+        if r["status"] != "ok":
+            continue
+        cfg = get_config(r["arch"])
+        rl = roofline.analyze(r, cfg)
+        lever = _lever(r, rl)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rl.t_compute*1e3:.2f} | "
+            f"{rl.t_memory*1e3:.2f} | {rl.t_collective*1e3:.2f} | "
+            f"{rl.dominant} | {rl.model_flops_per_chip:.3e} | "
+            f"{rl.useful_ratio:.3f} | {rl.roofline_frac:.3f} | {lever} |")
+    return "\n".join(rows)
+
+
+def _lever(r: dict, rl) -> str:
+    if rl.dominant == "memory":
+        if r["kind"] == "decode":
+            return "quantize weights/cache (b/16 of bytes)"
+        return "cut activation traffic (remat policy, fused loss)"
+    if rl.dominant == "collective":
+        return "reshard: avoid kv-head padding / overlap a2a"
+    return "larger per-chip tiles / batch"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quant", type=int, default=None)
+    args = ap.parse_args()
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### Dry-run {mesh}\n")
+        print(dryrun_table(mesh, args.quant))
+        print(f"\n### Roofline {mesh}\n")
+        print(roofline_table(mesh, args.quant))
+
+
+if __name__ == "__main__":
+    main()

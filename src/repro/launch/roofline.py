@@ -1,0 +1,166 @@
+"""Roofline analysis over dry-run artifacts (deliverable g).
+
+Hardware constants (TPU v5e-class, per chip):
+    peak 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+cost_analysis() of the compiled artifact is PER-DEVICE (the partitioned
+module), so the three terms are computed directly per chip:
+
+    T_compute = flops / PEAK_FLOPS
+    T_memory  = bytes_accessed / HBM_BW
+    T_coll    = collective_bytes / ICI_BW
+
+MODEL_FLOPS (the "useful work" yardstick):
+    train : 6 * N_active * tokens        (fwd 2ND + bwd 4ND)
+    decode: 2 * N_active * batch         (one token per sequence)
+    prefill: 2 * N_active * tokens
+divided by chips for the per-device comparison against HLO flops.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def count_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts (excluding embed/lm_head for the
+    6ND convention)."""
+    from repro.models import transformer as tf
+    sds = jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+    total = active = 0
+    moe_total = moe_active = 0
+    leaves = jax.tree_util.tree_flatten_with_path(sds)[0]
+    for path, leaf in leaves:
+        names = [str(getattr(e, "key", "")) for e in path]
+        n = int(np.prod(leaf.shape))
+        if "embed" in names or "lm_head" in names:
+            continue
+        total += n
+        if "moe" in names and names[-1] in ("wi", "wo"):
+            moe_total += n
+            e = cfg.moe.n_experts
+            moe_active += n * cfg.moe.top_k // e
+        else:
+            active += n
+    return total + moe_total, active + moe_active
+
+
+@dataclass
+class Roofline:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops_per_chip: float
+    useful_ratio: float      # MODEL_FLOPS / HLO_FLOPs (per chip)
+    roofline_frac: float     # max-term time vs bound from useful work
+
+    def as_dict(self):
+        return dict(t_compute=self.t_compute, t_memory=self.t_memory,
+                    t_collective=self.t_collective, dominant=self.dominant,
+                    model_flops_per_chip=self.model_flops_per_chip,
+                    useful_ratio=self.useful_ratio,
+                    roofline_frac=self.roofline_frac)
+
+
+def model_flops(cfg, kind: str, seq_len: int, global_batch: int) -> float:
+    total, active = count_params(cfg)
+    if kind == "train":
+        return 6.0 * active * seq_len * global_batch
+    if kind == "prefill":
+        return 2.0 * active * seq_len * global_batch
+    return 2.0 * active * global_batch          # decode: one token/seq
+
+
+def analyze(rec: dict, cfg) -> Roofline:
+    chips = rec["chips"]
+    t_c = rec["flops"] / PEAK_FLOPS
+    t_m = rec["hlo_bytes"] / HBM_BW
+    t_l = rec.get("coll_bytes",
+                  rec.get("collectives", {}).get("total_bytes", 0)) / ICI_BW
+    dominant = max(("compute", t_c), ("memory", t_m),
+                   ("collective", t_l), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, rec["kind"], rec["seq_len"], rec["global_batch"])
+    mf_chip = mf / chips
+    useful = mf_chip / max(rec["flops"], 1.0)
+    # the time a perfect implementation of the useful work would need
+    t_useful = max(mf_chip / PEAK_FLOPS,
+                   _min_bytes(cfg, rec) / HBM_BW)
+    frac = t_useful / max(t_c, t_m, t_l, 1e-30)
+    return Roofline(t_compute=t_c, t_memory=t_m, t_collective=t_l,
+                    dominant=dominant, model_flops_per_chip=mf_chip,
+                    useful_ratio=useful, roofline_frac=min(frac, 1.0))
+
+
+def _min_bytes(cfg, rec) -> float:
+    """Lower bound on per-chip bytes: weights touched once (+cache for
+    decode).  bf16 unless quantized codes."""
+    total, active = count_params(cfg)
+    chips = rec["chips"]
+    wbytes = 2.0 * total
+    if rec.get("quant"):
+        wbytes = total * rec["quant"] / 8.0
+    per_chip = wbytes / chips
+    return per_chip
+
+
+def load_records(mesh: str = "16x16", quant=None, variant: str = ""
+                 ) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("mesh") != mesh:
+            continue
+        if (r.get("quant") or None) != quant:
+            continue
+        if (r.get("variant") or "") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def report(mesh: str = "16x16", quant=None) -> str:
+    from repro.configs.registry import get_config
+    rows = []
+    hdr = (f"{'arch':20s} {'shape':12s} {'dom':10s} {'T_comp(ms)':>10s} "
+           f"{'T_mem(ms)':>10s} {'T_coll(ms)':>10s} {'useful':>7s} "
+           f"{'roofline':>8s}")
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for r in load_records(mesh, quant):
+        if r["status"] == "skip":
+            rows.append(f"{r['arch']:20s} {r['shape']:12s} SKIP ({r['reason'][:60]})")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"{r['arch']:20s} {r['shape']:12s} ERROR {r['error'][:60]}")
+            continue
+        cfg = get_config(r["arch"])
+        rl = analyze(r, cfg)
+        rows.append(
+            f"{r['arch']:20s} {r['shape']:12s} {rl.dominant:10s} "
+            f"{rl.t_compute*1e3:10.3f} {rl.t_memory*1e3:10.3f} "
+            f"{rl.t_collective*1e3:10.3f} {rl.useful_ratio:7.3f} "
+            f"{rl.roofline_frac:8.3f}")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--quant", type=int, default=None)
+    args = ap.parse_args()
+    print(report(args.mesh, args.quant))

@@ -1,0 +1,106 @@
+"""Training driver: real training on host devices (tiny/small models on CPU,
+the same code path scales to the production mesh via --mesh production).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama2-7b --tiny \
+      --steps 300 --batch 16 --seq 128 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.registry import get_config, get_tiny
+from repro.data import LMBatchLoader, make_corpus_tokens
+from repro.models import transformer as tf
+from repro.optim import adamw_init
+from repro.runtime.fault import FaultTolerantLoop, LoopConfig
+from repro.runtime.steps import make_train_step
+
+
+def train(arch: str = "llama2-7b", tiny: bool = True, steps: int = 200,
+          batch: int = 16, seq: int = 128, lr: float = 1e-3,
+          warmup: int = 20, microbatches: int = 1, seed: int = 0,
+          ckpt_dir: str | None = None, ckpt_every: int = 100,
+          grad_compression: str | None = None, log_every: int = 20,
+          params=None, corpus=None, inject_failure=None):
+    cfg = get_tiny(arch) if tiny else get_config(arch)
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = tf.init_params(cfg, key)
+    opt = adamw_init(params)
+    step_fn = make_train_step(cfg, microbatches=microbatches, peak_lr=lr,
+                              warmup=warmup, total_steps=steps,
+                              grad_compression=grad_compression)
+    jit_step = jax.jit(step_fn)
+
+    if corpus is None:
+        corpus = make_corpus_tokens(cfg.vocab, n_sentences=20000, seed=seed)
+    loader = LMBatchLoader(corpus, batch, seq, seed=seed)
+
+    losses = []
+
+    def wrapped(state, batch_np):
+        p, o = state
+        b = {"tokens": jnp.asarray(batch_np)}
+        p, o, m = jit_step(p, o, b)
+        return (p, o), m
+
+    def on_metrics(step, m, dt):
+        losses.append(float(m["loss"]))
+        if step % log_every == 0:
+            print(f"step {step:5d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} {dt*1e3:.0f}ms",
+                  flush=True)
+
+    state = (params, opt)
+    start = 0
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=2)
+        loop = FaultTolerantLoop(wrapped, mgr, LoopConfig(
+            ckpt_every=ckpt_every), inject_failure=inject_failure)
+        state, start = loop.maybe_resume(state)
+        state = loop.run(state, lambda s: loader_batch(loader, s), steps,
+                         start_step=start, on_metrics=on_metrics)
+    else:
+        for s in range(steps):
+            state, m = wrapped(state, loader_batch(loader, s))
+            on_metrics(s, m, 0.0)
+    params, opt = state
+    return cfg, params, losses
+
+
+def loader_batch(loader: LMBatchLoader, step: int):
+    loader.step = step
+    return loader.next_batch()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--grad-compression", default=None)
+    args = ap.parse_args()
+    t0 = time.time()
+    cfg, params, losses = train(
+        arch=args.arch, tiny=args.tiny, steps=args.steps, batch=args.batch,
+        seq=args.seq, lr=args.lr, microbatches=args.microbatches,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        grad_compression=args.grad_compression)
+    print(f"trained {cfg.name}: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

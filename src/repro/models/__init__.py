@@ -1,0 +1,1 @@
+"""Pure-JAX composable model zoo (assigned architectures, DESIGN.md §4)."""

@@ -1,0 +1,155 @@
+"""Attention: chunked (flash-style) GQA with causal/sliding windows, KV caches,
+and DeepSeek-V2 MLA (compressed-KV) — pure JAX, SPMD-friendly.
+
+The chunked kernel is an online-softmax scan over KV blocks (queries chunked
+too), so the S x S score matrix is never materialized: prefill_32k fits, and
+under GSPMD a sequence-sharded cache turns the softmax reductions into
+all-reduces (flash-decoding style partial-softmax combine, inserted by XLA).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------ chunked flash
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int | jax.Array = 0,
+                    q_chunk: int = 1024, k_chunk: int = 1024,
+                    remat_chunks: bool = False,
+                    expand_kv: bool = False) -> jax.Array:
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd), H = KV*G -> (B,Sq,H,hd).
+
+    ``window``: causal sliding window (attend to the last ``window`` keys).
+    ``q_offset``: absolute position of q[0] (prefill continuation / decode).
+    ``remat_chunks``: checkpoint the KV-chunk step so autodiff recomputes the
+    (cq, ck) probability block in the backward instead of stacking it as a
+    scan residual — the FlashAttention backward strategy; turns O(S^2)
+    residual HBM traffic into O(S^2) recompute flops (EXPERIMENTS.md §Perf).
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    if expand_kv and kv != h:
+        # GQA reshape (h -> kv x g) defeats head sharding when h % mesh != 0
+        # on the grouped layout; expanding K/V to h heads costs g x K/V bytes
+        # but keeps the einsums shardable on the flat head axis (§Perf B2)
+        g_rep = h // kv
+        k = jnp.repeat(k, g_rep, axis=2)
+        v = jnp.repeat(v, g_rep, axis=2)
+        kv = h
+    from repro.runtime.actsharding import shard_named
+    q = shard_named(q, "qkv")
+    k = shard_named(k, "qkv")
+    v = shard_named(v, "qkv")
+    dv = v.shape[-1]                # may differ from hd (MLA)
+    g = h // kv
+    scale = hd ** -0.5
+    cq, ck = min(q_chunk, sq), min(k_chunk, sk)
+    nq, nk = -(-sq // cq), -(-sk // ck)
+    sq_p, sk_p = nq * cq, nk * ck
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    qp = qp.reshape(b, nq, cq, kv, g, hd)
+    kp = kp.reshape(b, nk, ck, kv, hd)
+    vp = vp.reshape(b, nk, ck, kv, dv)
+    qpos0 = jnp.asarray(q_offset, jnp.int32)
+
+    def q_block(qi):
+        qc = qp[:, qi].astype(jnp.float32) * scale          # (b,cq,kv,g,hd)
+        qpos = qpos0 + qi * cq + jnp.arange(cq, dtype=jnp.int32)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc = kp[:, ki].astype(jnp.float32)              # (b,ck,kv,hd)
+            vc = vp[:, ki].astype(jnp.float32)
+            kpos = ki * ck + jnp.arange(ck, dtype=jnp.int32)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc)     # (b,kv,g,cq,ck)
+            mask = kpos[None, :] <= (qpos[:, None] if causal else jnp.int32(2**30))
+            mask &= kpos[None, :] < sk                       # key padding
+            if window is not None:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vc)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, cq, dv), jnp.float32)
+        step = jax.checkpoint(kv_step) if remat_chunks else kv_step
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                      jnp.arange(nk, dtype=jnp.int32))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]        # (b,kv,g,cq,hd)
+        return jnp.moveaxis(out, 3, 1)                      # (b,cq,kv,g,hd)
+
+    out = jax.lax.map(q_block, jnp.arange(nq, dtype=jnp.int32))  # (nq,b,cq,kv,g,dv)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq_p, kv, g, dv)[:, :sq]
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ caches
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """Ring-buffered when capacity < full context (sliding-window archs)."""
+    k: jax.Array          # (B, cap, KV, hd)
+    v: jax.Array          # (B, cap, KV, hd)
+
+    @staticmethod
+    def init(b: int, cap: int, kv: int, hd: int, dtype=jnp.float32) -> "KVCache":
+        return KVCache(k=jnp.zeros((b, cap, kv, hd), dtype),
+                       v=jnp.zeros((b, cap, kv, hd), dtype))
+
+
+def cache_insert(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array) -> KVCache:
+    """Insert one step (B,1,KV,hd) at ring slot pos % cap."""
+    cap = cache.k.shape[1]
+    slot = (pos % cap).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, slot, 0, 0))
+    return KVCache(k=k, v=v)
+
+
+def decode_attention(q: jax.Array, cache: KVCache, pos: jax.Array) -> jax.Array:
+    """One-token attention over the cache. q (B,1,H,hd) -> (B,1,H,hd).
+
+    ``pos``: current absolute position (number of tokens already inserted,
+    including this one).  With a ring buffer every slot written so far is a
+    valid window member (softmax is permutation-invariant), so validity is
+    just slot_index < pos for the full-cache case and "written" for rings.
+    """
+    b, _, h, hd = q.shape
+    cap, kv = cache.k.shape[1], cache.k.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+    # keep the cache in its storage dtype — casting it to f32 would round-trip
+    # the full cache through HBM every layer (§Perf iteration); accumulate the
+    # contractions in f32 instead.
+    qf = (q.astype(jnp.float32) * scale).astype(cache.k.dtype)
+    qf = qf.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, cache.k,
+                   preferred_element_type=jnp.float32)       # (b,kv,g,cap)
+    valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < jnp.minimum(pos, cap)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(cache.v.dtype), cache.v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

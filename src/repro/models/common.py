@@ -1,0 +1,164 @@
+"""Shared building blocks: the linear chokepoint, norms, RoPE/M-RoPE, losses.
+
+Every weight multiplication in the zoo goes through ``linear`` so that
+ (a) RaanA calibration can tap per-layer stats / inject output perturbations
+     (the d f / d H^{(k)} probe of paper §4) via a ``LinearCtx``, and
+ (b) quantized models are just param trees whose 2-D weights were swapped for
+     ``QuantizedLinear`` nodes — dispatch happens here, model code unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import QuantizedLinear
+
+# ---------------------------------------------------------------- linear tap
+
+
+class LinearCtx:
+    """Mutable-during-trace collector for calibration (unrolled mode only).
+
+    ``collect_hessian`` additionally accumulates the layer-wise Hessian
+    X^T X (d, d) per linear — needed only by the GPTQ baseline (the paper's
+    point is precisely that RaanA does NOT need it)."""
+
+    def __init__(self, perturb: dict | None = None, collect: bool = False,
+                 collect_hessian: bool = False):
+        self.perturb = perturb
+        self.collect = collect
+        self.collect_hessian = collect_hessian
+        self.taps: dict[str, dict] = {}
+        self.hessians: dict[str, jax.Array] = {}
+
+
+def linear(w, x: jax.Array, ctx: Optional[LinearCtx] = None,
+           name: str | None = None) -> jax.Array:
+    """y = x @ w for w either a raw (d, c) array or a QuantizedLinear."""
+    if isinstance(w, QuantizedLinear):
+        return w.apply(x)
+    y = jnp.einsum("...d,dc->...c", x, w.astype(x.dtype))
+    if ctx is not None and name is not None:
+        if ctx.collect_hessian:
+            x2 = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+            h = x2.T @ x2
+            prev = ctx.hessians.get(name)
+            ctx.hessians[name] = h if prev is None else prev + h
+        if ctx.collect:
+            xf = x.astype(jnp.float32)
+            ctx.taps[name] = dict(
+                x_fro_sq=jnp.sum(xf * xf),
+                x_col_sq=jnp.sum(xf * xf, axis=tuple(range(x.ndim - 1))),
+                w_fro=jnp.linalg.norm(w.astype(jnp.float32)),
+                n_rows=jnp.asarray(x.size // x.shape[-1], jnp.float32),
+                d=w.shape[0], c=w.shape[1], h_shape=y.shape)
+        if ctx.perturb is not None and name in ctx.perturb:
+            y = y + ctx.perturb[name].astype(y.dtype)
+    return y
+
+
+# ------------------------------------------------------------------- norms
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(kind: str, x: jax.Array, p: dict) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def norm_params(kind: str, d: int) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# -------------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """x (B, S, H, hd); positions (B, S) -> rotated x (half-split convention)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                                   # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv          # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: tuple[int, ...],
+                theta: float = 1_000_000.0) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): positions (3, B, S); rotary angle channels
+    are sectioned across (temporal, height, width) position streams."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                                   # (hd/2,)
+    ang_all = positions[..., None].astype(jnp.float32) * inv      # (3, B, S, hd/2)
+    import numpy as np
+    sec_id = jnp.asarray(np.repeat(np.arange(len(sections)), sections))  # (hd/2,)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1), sec_id[None, None, :, None], axis=-1
+    )[..., 0]                                                     # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (n, d)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / max(d // 2 - 1, 1)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -------------------------------------------------------------------- loss
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean NLL; logits (..., V) computed in f32 for stability."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# -------------------------------------------------------------------- init
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))

@@ -1,0 +1,352 @@
+"""Serving paths: cache init, prefill (sequence -> logits + caches), and the
+single-token decode step, for every mixer family.
+
+Cache layout mirrors ``params["layers"]``: one stacked cache tree per scan
+position, so decode scans layers and caches together.  Sliding-window archs
+get ring-buffered KV caches (capacity = window); attention-free mixers carry
+O(1) recurrent state — which is precisely why they are the archs that can
+serve the long_500k cell (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attnmod
+from . import mla as mlamod
+from . import rglru as rglrumod
+from . import rwkv6 as rwkvmod
+from .attention import KVCache
+from .common import (apply_mrope, apply_norm, apply_rope, linear,
+                     rms_norm, sinusoidal_positions)
+from .config import ModelConfig
+from .transformer import (_ffn_apply, _qk_normalize, embed_tokens, encode,
+                          get_layer, layer_seq, layers_scannable)
+
+# ----------------------------------------------------------- cache structs
+
+
+def attn_capacity(cfg: ModelConfig, context: int) -> int:
+    return min(context, cfg.window) if cfg.window else context
+
+
+def init_layer_cache(cfg: ModelConfig, mixer: str, b: int, context: int,
+                     dtype=jnp.float32, encoder_out=None, lp=None) -> dict:
+    cache: dict[str, Any] = {}
+    if mixer == "attn":
+        cache["kv"] = KVCache.init(b, attn_capacity(cfg, context), cfg.n_kv,
+                                   cfg.hd, dtype)
+    elif mixer == "mla":
+        cache["mla"] = mlamod.MLACache.init(b, context, cfg.mla.kv_lora,
+                                            cfg.mla.qk_rope, dtype)
+    elif mixer == "rwkv":
+        cache["rwkv"] = rwkvmod.RWKVState.init(b, cfg.n_heads, cfg.hd,
+                                               cfg.d_model, dtype)
+    elif mixer == "rglru":
+        cache["rglru"] = rglrumod.RGLRUState.init(
+            b, cfg.rglru_width or cfg.d_model, dtype)
+    if cfg.enc_dec:
+        assert encoder_out is not None and lp is not None
+        t = encoder_out.shape[1]
+        k = linear(lp["xattn"]["wk"], encoder_out).reshape(
+            b, t, cfg.n_kv, cfg.hd)
+        v = linear(lp["xattn"]["wv"], encoder_out).reshape(
+            b, t, cfg.n_kv, cfg.hd)
+        cache["xk"], cache["xv"] = k, v
+    return cache
+
+
+def init_caches(cfg: ModelConfig, params: dict, b: int, context: int,
+                dtype=jnp.float32, encoder_out=None) -> list:
+    """One stacked cache tree per scan position (parallel to params layers)."""
+    pat, p = cfg.pattern, cfg.scan_period
+    caches = []
+    for j in range(p):
+        stack = params["layers"][j]
+        n_j = (len(stack) if isinstance(stack, list)
+               else jax.tree.leaves(stack)[0].shape[0])
+
+        def one(i):
+            lp = (stack[i] if isinstance(stack, list)
+                  else jax.tree.map(lambda a: a[i], stack))
+            return init_layer_cache(cfg, pat[j], b, context, dtype,
+                                    encoder_out, lp)
+        caches.append(jax.tree.map(lambda *xs: jnp.stack(xs, 0),
+                                   *[one(i) for i in range(n_j)]))
+    return caches
+
+
+# ----------------------------------------------------------------- prefill
+
+
+def _ring_fill(cache: KVCache, k: jax.Array, v: jax.Array) -> KVCache:
+    """Fill a ring cache from a full prefix (B, S, kv, hd): keep last cap."""
+    cap = cache.k.shape[1]
+    s = k.shape[1]
+    if s <= cap:
+        return KVCache(k=cache.k.at[:, :s].set(k.astype(cache.k.dtype)),
+                       v=cache.v.at[:, :s].set(v.astype(cache.v.dtype)))
+    tail_t = jnp.arange(s - cap, s)
+    slots = tail_t % cap
+    return KVCache(k=cache.k.at[:, slots].set(k[:, tail_t].astype(cache.k.dtype)),
+                   v=cache.v.at[:, slots].set(v[:, tail_t].astype(cache.v.dtype)))
+
+
+def layer_prefill(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
+                  positions, cache: dict, encoder_out=None):
+    """Sequence forward through one layer, also filling its cache.
+    Returns (h, aux, new_cache)."""
+    b, s, d = h.shape
+    hn = apply_norm(cfg.norm, h, lp["ln1"])
+    new_cache = dict(cache)
+    if mixer == "attn":
+        p = lp["attn"]
+        hq, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+        q = linear(p["wq"], hn).reshape(b, s, hq, hd)
+        k = linear(p["wk"], hn).reshape(b, s, kv, hd)
+        v = linear(p["wv"], hn).reshape(b, s, kv, hd)
+        q, k = _qk_normalize(p, q, k)
+        if cfg.pos == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        elif cfg.pos == "mrope":
+            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        out = attnmod.flash_attention(q, k, v, causal=True, window=cfg.window,
+                                      expand_kv=cfg.expand_kv)
+        mix = linear(p["wo"], out.reshape(b, s, hq * hd))
+        from repro.runtime.actsharding import shard_named
+        new_cache["kv"] = _ring_fill(cache["kv"], shard_named(k, "kv"),
+                                     shard_named(v, "kv"))
+    elif mixer == "mla":
+        m, p = cfg.mla, lp["mla"]
+        mix = mlamod.mla_full(p, hn, m, positions)
+        c_kv, k_rope = mlamod._project_kv_latent(p, hn, m, positions, None, "")
+        new_cache["mla"] = mlamod.MLACache(
+            c_kv=cache["mla"].c_kv.at[:, :s].set(
+                c_kv.astype(cache["mla"].c_kv.dtype)),
+            k_rope=cache["mla"].k_rope.at[:, :s].set(
+                k_rope.astype(cache["mla"].k_rope.dtype)))
+    elif mixer == "rwkv":
+        mix, st = rwkvmod.time_mix(lp["tm"], hn, n_heads=cfg.n_heads,
+                                   head_dim=cfg.hd, return_state=True)
+        new_cache["rwkv"] = rwkvmod.RWKVState(
+            s=st, x_prev_tm=hn[:, -1].astype(cache["rwkv"].x_prev_tm.dtype),
+            x_prev_cm=cache["rwkv"].x_prev_cm)
+    elif mixer == "rglru":
+        mix, st = rglrumod.rglru_block(lp["rglru"], hn, return_state=True)
+        new_cache["rglru"] = st
+    else:
+        raise ValueError(mixer)
+    h = h + mix.astype(h.dtype)
+    if cfg.enc_dec:
+        hx = apply_norm(cfg.norm, h, lp["ln_x"])
+        q = linear(lp["xattn"]["wq"], hx).reshape(b, s, cfg.n_heads, cfg.hd)
+        out = attnmod.flash_attention(
+            q, cache["xk"], cache["xv"], causal=False)
+        h = h + linear(lp["xattn"]["wo"], out.reshape(b, s, -1))
+    h2 = apply_norm(cfg.norm, h, lp["ln2"])
+    if mixer == "rwkv":
+        y = rwkvmod.channel_mix(lp["cm"], h2)
+        new_cache["rwkv"] = rwkvmod.RWKVState(
+            s=new_cache["rwkv"].s, x_prev_tm=new_cache["rwkv"].x_prev_tm,
+            x_prev_cm=h2[:, -1].astype(cache["rwkv"].x_prev_cm.dtype))
+        aux = 0.0
+    else:
+        y, aux = _ffn_apply(cfg, lp, h2, None, "pf")
+    from repro.runtime.actsharding import shard_hidden
+    return shard_hidden(h + y.astype(h.dtype)), aux, new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens=None, *, embeds=None,
+            positions=None, context: int | None = None, enc_embeds=None,
+            cache_dtype=jnp.float32, scan: bool = True):
+    """Run the prefix, return (logits (B, S, V), caches, pos = S)."""
+    h = embeds if embeds is not None else embed_tokens(cfg, params, tokens)
+    b, s, d = h.shape
+    context = context or s
+    encoder_out = None
+    if cfg.enc_dec:
+        encoder_out = encode(cfg, params, enc_embeds, scan=scan)
+    if cfg.pos == "sinusoidal":
+        h = h + sinusoidal_positions(s, d).astype(h.dtype)[None]
+    if positions is None:
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        positions = (jnp.broadcast_to(pos[None], (3, b, s))
+                     if cfg.pos == "mrope" else pos)
+    caches = init_caches(cfg, params, b, context, cache_dtype, encoder_out)
+    scan = scan and layers_scannable(params)
+    pat, p_period = cfg.pattern, cfg.scan_period
+    n_full = cfg.n_layers // p_period
+    rem = cfg.n_layers % p_period
+    new_caches = [None] * p_period
+
+    if scan and n_full > 0:
+        full_stacks = [jax.tree.map(lambda a: a[:n_full], st)
+                       for st in params["layers"]]
+        full_caches = [jax.tree.map(lambda a: a[:n_full], cs) for cs in caches]
+
+        def body(h, xs):
+            lps, cs = xs
+            outs = []
+            for j in range(p_period):
+                h, _, nc = layer_prefill(cfg, pat[j], lps[j], h, positions,
+                                         cs[j], encoder_out)
+                outs.append(nc)
+            return h, tuple(outs)
+
+        h, scanned = jax.lax.scan(body, h, (tuple(full_stacks),
+                                            tuple(full_caches)))
+        new_caches = list(scanned)
+        for j in range(rem):
+            lp = jax.tree.map(lambda a: a[n_full], params["layers"][j])
+            cs = jax.tree.map(lambda a: a[n_full], caches[j])
+            h, _, nc = layer_prefill(cfg, pat[j], lp, h, positions, cs,
+                                     encoder_out)
+            new_caches[j] = jax.tree.map(
+                lambda full, one: jnp.concatenate([full, one[None]], 0),
+                new_caches[j], nc)
+    else:
+        percall = [[] for _ in range(p_period)]
+        for i in range(cfg.n_layers):
+            jpos, idx = i % p_period, i // p_period
+            lp = get_layer(params, jpos, idx)
+            cs = jax.tree.map(lambda a: a[idx], caches[jpos])
+            h, _, nc = layer_prefill(cfg, pat[i], lp, h, positions, cs,
+                                     encoder_out)
+            percall[jpos].append(nc)
+        new_caches = [jax.tree.map(lambda *xs: jnp.stack(xs, 0), *cl)
+                      for cl in percall]
+    h = apply_norm(cfg.norm, h, params["final_norm"])
+    logits = linear(params["lm_head"], h)
+    return logits, new_caches, jnp.int32(s)
+
+
+# ------------------------------------------------------------ decode step
+
+
+def layer_decode(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
+                 cache: dict, pos: jax.Array):
+    """One layer, one token: h (B, 1, d) -> (h, new_cache)."""
+    b = h.shape[0]
+    hn = apply_norm(cfg.norm, h, lp["ln1"])
+    new_cache = dict(cache)
+    if mixer == "attn":
+        p = lp["attn"]
+        hq, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+        posb = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+        if cfg.pos == "mrope":
+            posb = jnp.broadcast_to(pos, (3, b, 1)).astype(jnp.int32)
+        q = linear(p["wq"], hn).reshape(b, 1, hq, hd)
+        k = linear(p["wk"], hn).reshape(b, 1, kv, hd)
+        v = linear(p["wv"], hn).reshape(b, 1, kv, hd)
+        q, k = _qk_normalize(p, q, k)
+        if cfg.pos == "rope":
+            q = apply_rope(q, posb, cfg.rope_theta)
+            k = apply_rope(k, posb, cfg.rope_theta)
+        elif cfg.pos == "mrope":
+            q = apply_mrope(q, posb, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, posb, cfg.mrope_sections, cfg.rope_theta)
+        kvc = attnmod.cache_insert(cache["kv"], k, v, pos)
+        out = attnmod.decode_attention(q, kvc, pos + 1)
+        mix = linear(p["wo"], out.reshape(b, 1, hq * hd))
+        new_cache["kv"] = kvc
+    elif mixer == "mla":
+        mix, mc = mlamod.mla_decode(lp["mla"], hn, cfg.mla, cache["mla"], pos)
+        new_cache["mla"] = mc
+    elif mixer == "rwkv":
+        mix, st = rwkvmod.time_mix_decode(lp["tm"], hn[:, 0],
+                                          cache["rwkv"], n_heads=cfg.n_heads,
+                                          head_dim=cfg.hd)
+        mix = mix[:, None, :]
+        new_cache["rwkv"] = st
+    elif mixer == "rglru":
+        mix, st = rglrumod.rglru_decode(lp["rglru"], hn[:, 0], cache["rglru"])
+        mix = mix[:, None, :]
+        new_cache["rglru"] = st
+    else:
+        raise ValueError(mixer)
+    h = h + mix.astype(h.dtype)
+    if cfg.enc_dec:
+        hx = apply_norm(cfg.norm, h, lp["ln_x"])
+        q = linear(lp["xattn"]["wq"], hx).reshape(b, 1, cfg.n_heads, cfg.hd)
+        t = cache["xk"].shape[1]
+        out = attnmod.decode_attention(
+            q, KVCache(k=cache["xk"], v=cache["xv"]), jnp.int32(t))
+        h = h + linear(lp["xattn"]["wo"], out.reshape(b, 1, -1))
+    h2 = apply_norm(cfg.norm, h, lp["ln2"])
+    if mixer == "rwkv":
+        y = rwkvmod.channel_mix(lp["cm"], h2[:, 0],
+                                new_cache["rwkv"].x_prev_cm)[:, None, :]
+        st = new_cache["rwkv"]
+        new_cache["rwkv"] = rwkvmod.RWKVState(
+            s=st.s, x_prev_tm=st.x_prev_tm,
+            x_prev_cm=h2[:, 0].astype(st.x_prev_cm.dtype))
+    else:
+        y, _ = _ffn_apply(cfg, lp, h2, None, "dec")
+    return h + y.astype(h.dtype), new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, caches: list,
+                tokens: jax.Array, pos: jax.Array, scan: bool = True):
+    """One token for the whole model: tokens (B, 1) -> (logits (B, V),
+    new caches).  ``pos`` = number of tokens already in the cache."""
+    h = embed_tokens(cfg, params, tokens)
+    if cfg.pos == "sinusoidal":
+        d = h.shape[-1]
+        table = sinusoidal_positions(caches_context(caches, cfg), d)
+        h = h + jax.lax.dynamic_slice_in_dim(table, pos, 1, 0)[None].astype(h.dtype)
+    scan = scan and layers_scannable(params)
+    pat, p_period = cfg.pattern, cfg.scan_period
+    n_full = cfg.n_layers // p_period
+    rem = cfg.n_layers % p_period
+    new_caches = [None] * p_period
+
+    if scan and n_full > 0:
+        full_stacks = [jax.tree.map(lambda a: a[:n_full], st)
+                       for st in params["layers"]]
+        full_caches = [jax.tree.map(lambda a: a[:n_full], cs) for cs in caches]
+
+        def body(h, xs):
+            lps, cs = xs
+            outs = []
+            for j in range(p_period):
+                h, nc = layer_decode(cfg, pat[j], lps[j], h, cs[j], pos)
+                outs.append(nc)
+            return h, tuple(outs)
+
+        h, scanned = jax.lax.scan(body, h, (tuple(full_stacks),
+                                            tuple(full_caches)))
+        new_caches = list(scanned)
+        for j in range(rem):
+            lp = jax.tree.map(lambda a: a[n_full], params["layers"][j])
+            cs = jax.tree.map(lambda a: a[n_full], caches[j])
+            h, nc = layer_decode(cfg, pat[j], lp, h, cs, pos)
+            new_caches[j] = jax.tree.map(
+                lambda full, one: jnp.concatenate([full, one[None]], 0),
+                new_caches[j], nc)
+    else:
+        percall = [[] for _ in range(p_period)]
+        for i in range(cfg.n_layers):
+            jpos, idx = i % p_period, i // p_period
+            lp = get_layer(params, jpos, idx)
+            cs = jax.tree.map(lambda a: a[idx], caches[jpos])
+            h, nc = layer_decode(cfg, pat[i], lp, h, cs, pos)
+            percall[jpos].append(nc)
+        new_caches = [jax.tree.map(lambda *xs: jnp.stack(xs, 0), *cl)
+                      for cl in percall]
+    h = apply_norm(cfg.norm, h, params["final_norm"])
+    logits = linear(params["lm_head"], h)
+    return logits[:, 0], new_caches
+
+
+def caches_context(caches: list, cfg: ModelConfig) -> int:
+    """Max positional extent needed for sinusoidal decode tables."""
+    for cs in caches:
+        leaves = jax.tree.leaves(cs)
+        for leaf in leaves:
+            if leaf.ndim >= 3:
+                return max(2048, leaf.shape[2])
+    return 2048

@@ -1,0 +1,24 @@
+"""Feed-forward blocks: fused-gate SwiGLU/GeGLU, plain GELU (whisper),
+and the RWKV channel-mix (lives in rwkv6.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import LinearCtx, linear
+
+
+def glu_ffn(p: dict, x: jax.Array, act: str = "silu",
+            ctx: LinearCtx | None = None, name: str = "mlp") -> jax.Array:
+    """wi (d, 2f) fuses gate|up; wo (f, d)."""
+    gu = linear(p["wi"], x, ctx, f"{name}.wi")
+    gate, up = jnp.split(gu, 2, axis=-1)
+    g = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+    return linear(p["wo"], g * up, ctx, f"{name}.wo")
+
+
+def gelu_ffn(p: dict, x: jax.Array, ctx: LinearCtx | None = None,
+             name: str = "mlp") -> jax.Array:
+    """Plain 2-matrix GELU MLP (whisper)."""
+    h = jax.nn.gelu(linear(p["wi"], x, ctx, f"{name}.wi"))
+    return linear(p["wo"], h, ctx, f"{name}.wo")

@@ -1,0 +1,109 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV state is compressed to a per-token latent c_kv (kv_lora dims) plus a
+shared rotary key (qk_rope dims).  Prefill/train expands K/V and runs the
+chunked flash path; decode uses the absorbed form (W_uk folded into the
+query, W_uv applied after the softmax) so the cache stays
+(B, S, kv_lora + qk_rope) — the whole point of MLA.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .common import LinearCtx, apply_rope, linear, rms_norm
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MLACache:
+    c_kv: jax.Array    # (B, cap, kv_lora)
+    k_rope: jax.Array  # (B, cap, qk_rope)
+
+    @staticmethod
+    def init(b: int, cap: int, kv_lora: int, qk_rope: int, dtype=jnp.float32):
+        return MLACache(c_kv=jnp.zeros((b, cap, kv_lora), dtype),
+                        k_rope=jnp.zeros((b, cap, qk_rope), dtype))
+
+
+def _project_q(p: dict, x: jax.Array, mcfg, positions, ctx, name):
+    cq = rms_norm(linear(p["wq_a"], x, ctx, f"{name}.wq_a"), p["q_norm"])
+    q = linear(p["wq_b"], cq, ctx, f"{name}.wq_b")
+    b, s = x.shape[:2]
+    q = q.reshape(b, s, mcfg.n_heads, mcfg.qk_nope + mcfg.qk_rope)
+    q_nope, q_rope = q[..., :mcfg.qk_nope], q[..., mcfg.qk_nope:]
+    q_rope = apply_rope(q_rope, positions)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p: dict, x: jax.Array, mcfg, positions, ctx, name):
+    kv_a = linear(p["wkv_a"], x, ctx, f"{name}.wkv_a")
+    c_kv = rms_norm(kv_a[..., : mcfg.kv_lora], p["kv_norm"])
+    k_rope = kv_a[..., mcfg.kv_lora:]
+    b, s = x.shape[:2]
+    k_rope = apply_rope(k_rope.reshape(b, s, 1, mcfg.qk_rope), positions)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_full(p: dict, x: jax.Array, mcfg, positions: jax.Array,
+             ctx: LinearCtx | None = None, name: str = "mla",
+             remat_chunks: bool = False) -> jax.Array:
+    """Train / prefill path: expand K,V, chunked flash attention."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = mcfg.n_heads, mcfg.qk_nope, mcfg.qk_rope, mcfg.v_head
+    q_nope, q_rope = _project_q(p, x, mcfg, positions, ctx, name)
+    c_kv, k_rope = _project_kv_latent(p, x, mcfg, positions, ctx, name)
+    kv = linear(p["wkv_b"], c_kv, ctx, f"{name}.wkv_b").reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (b, s, h, dr))], axis=-1)
+    out = attn.flash_attention(q, k, v, causal=True,
+                               remat_chunks=remat_chunks)
+    out = out.reshape(b, s, h * dv)
+    return linear(p["wo"], out, ctx, f"{name}.wo")
+
+
+def mla_decode(p: dict, x: jax.Array, mcfg, cache: MLACache, pos: jax.Array,
+               ctx: LinearCtx | None = None, name: str = "mla"):
+    """Absorbed decode: scores/context in latent space, cache stays compressed."""
+    b = x.shape[0]
+    h, dn, dr, dv = mcfg.n_heads, mcfg.qk_nope, mcfg.qk_rope, mcfg.v_head
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    q_nope, q_rope = _project_q(p, x, mcfg, positions, ctx, name)   # (b,1,h,*)
+    c_new, kr_new = _project_kv_latent(p, x, mcfg, positions, ctx, name)
+    cap = cache.c_kv.shape[1]
+    slot = (pos % cap).astype(jnp.int32)
+    cache = MLACache(
+        c_kv=jax.lax.dynamic_update_slice(cache.c_kv,
+                                          c_new.astype(cache.c_kv.dtype),
+                                          (0, slot, 0)),
+        k_rope=jax.lax.dynamic_update_slice(cache.k_rope,
+                                            kr_new.astype(cache.k_rope.dtype),
+                                            (0, slot, 0)))
+    w_b = p["wkv_b"].reshape(mcfg.kv_lora, h, dn + dv)
+    w_uk, w_uv = w_b[..., :dn], w_b[..., dn:]
+    # contract against the caches in their storage dtype (f32 casts would
+    # round-trip the compressed cache through HBM per layer — §Perf)
+    cdtype = cache.c_kv.dtype
+    qc = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(cdtype),
+                    w_uk.astype(cdtype),
+                    preferred_element_type=jnp.float32)             # (b,h,lora)
+    s = jnp.einsum("bhl,bsl->bhs", qc.astype(cdtype), cache.c_kv,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(cdtype),
+                       cache.k_rope, preferred_element_type=jnp.float32)
+    s = s * (dn + dr) ** -0.5
+    valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < jnp.minimum(pos + 1, cap)
+    s = jnp.where(valid[:, None, :], s, attn.NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bhs,bsl->bhl", probs.astype(cdtype), cache.c_kv,
+                       preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhl,lhd->bhd", ctx_c.astype(cdtype),
+                     w_uv.astype(cdtype),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * dv).astype(x.dtype)
+    return linear(p["wo"], out, ctx, f"{name}.wo"), cache

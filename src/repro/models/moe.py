@@ -1,0 +1,104 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-friendly).
+
+Dispatch = argsort token->expert assignments by expert id, rank each token
+within its expert (cumulative count), scatter into an (E, C, d) buffer, run
+grouped expert GEMMs, and combine with the routing weights.  No (T, E, C)
+one-hot is ever materialized (GShard-style einsum dispatch would be ~GBs at
+160 experts); under GSPMD the (E, C, d) buffer is sharded on the expert axis,
+so the scatter/gather lower to the all-to-all-ish collectives of expert
+parallelism.  Tokens past capacity are dropped (standard top-k capacity
+semantics); an aux load-balance loss is returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import QuantizedGrouped
+from .common import LinearCtx, linear
+
+
+def _expert_matmul(w, xbuf: jax.Array, ctx: LinearCtx | None = None,
+                   name: str | None = None) -> jax.Array:
+    """Grouped GEMM (E,C,d)x(E,d,f) with QuantizedGrouped dispatch and the
+    same calibration taps/perturbations as ``common.linear``."""
+    if isinstance(w, QuantizedGrouped):
+        return w.apply(xbuf).astype(xbuf.dtype)
+    y = jnp.einsum("ecd,edf->ecf", xbuf, w.astype(xbuf.dtype))
+    if ctx is not None and name is not None:
+        if ctx.collect:
+            xf = xbuf.astype(jnp.float32)
+            ctx.taps[name] = dict(
+                x_fro_sq=jnp.sum(xf * xf),
+                x_col_sq=jnp.sum(xf * xf, axis=(0, 1)),
+                w_fro=jnp.linalg.norm(w.astype(jnp.float32)),
+                n_rows=jnp.asarray(xbuf.shape[0] * xbuf.shape[1], jnp.float32),
+                d=w.shape[1], c=w.shape[2], h_shape=y.shape, grouped=True,
+                n_groups=w.shape[0])
+        if ctx.perturb is not None and name in ctx.perturb:
+            y = y + ctx.perturb[name].astype(y.dtype)
+    return y
+
+
+def moe_ffn(p: dict, x: jax.Array, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25, act: str = "silu",
+            ctx: LinearCtx | None = None, name: str = "moe"):
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar).
+
+    Params: router (d, E) fp32; wi (E, d, 2f); wo (E, f, d);
+    optional shared experts: swi (d, 2fs), swo (fs, d).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)                  # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # --- load-balance aux loss (Switch-style) ---
+    me = jnp.mean(probs, axis=0)                                         # (E,)
+    ce = jnp.zeros((n_experts,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0 / (t * top_k))
+    aux = n_experts * jnp.sum(me * ce)
+
+    # --- sort-based dispatch ---
+    capacity = int(max(top_k, capacity_factor * t * top_k / n_experts))
+    flat_expert = expert_ids.reshape(-1)                                 # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    e_sorted = flat_expert[order]
+    t_sorted = flat_token[order]
+    g_sorted = flat_gate[order]
+    # rank within expert = index - start offset of that expert's run
+    counts = jnp.zeros((n_experts,), jnp.int32).at[e_sorted].add(1)
+    starts = jnp.cumsum(counts) - counts                                 # (E,)
+    rank = jnp.arange(t * top_k, dtype=jnp.int32) - starts[e_sorted]
+    keep = rank < capacity
+    slot = jnp.where(keep, rank, capacity)                               # overflow row
+    xbuf = jnp.zeros((n_experts, capacity + 1, d), xf.dtype)
+    xbuf = xbuf.at[e_sorted, slot].add(
+        jnp.where(keep[:, None], xf[t_sorted], 0.0).astype(xf.dtype))
+    xbuf = xbuf[:, :capacity]                                            # (E, C, d)
+
+    # --- grouped expert GEMMs ---
+    gu = _expert_matmul(p["wi"], xbuf, ctx, f"{name}.wi")
+    gate_h, up = jnp.split(gu, 2, axis=-1)
+    h = (jax.nn.silu(gate_h) if act == "silu" else jax.nn.gelu(gate_h)) * up
+    ybuf = _expert_matmul(p["wo"], h, ctx, f"{name}.wo")                 # (E, C, d)
+
+    # --- combine ---
+    gathered = ybuf[e_sorted, jnp.minimum(slot, capacity - 1)]           # (T*K, d)
+    contrib = jnp.where(keep[:, None], gathered * g_sorted[:, None].astype(
+        gathered.dtype), 0.0)
+    y = jnp.zeros((t, d), xf.dtype).at[t_sorted].add(contrib.astype(xf.dtype))
+
+    # --- shared experts (DeepSeek-V2) ---
+    if "swi" in p:
+        gu_s = linear(p["swi"], xf, ctx, f"{name}.swi")
+        gsh, ush = jnp.split(gu_s, 2, axis=-1)
+        hs = (jax.nn.silu(gsh) if act == "silu" else jax.nn.gelu(gsh)) * ush
+        y = y + linear(p["swo"], hs, ctx, f"{name}.swo")
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block = (gate branch: GeLU(W_g x)) * (recurrence branch: RG-LRU(conv1d(W_x x)))
+-> W_o.  The RG-LRU is a gated diagonal linear recurrence
+
+    r_t = sigmoid(BD_a xc_t);  i_t = sigmoid(BD_x xc_t)
+    a_t = exp(c * r_t * log sigmoid(Lambda))          (per channel, in (0,1))
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * xc_t)
+
+computed over a sequence with jax.lax.associative_scan (parallel prefix), and
+as a single fused step at decode.  Gate projections are block-diagonal with
+one block per head, as in the reference implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import LinearCtx, linear
+
+RGLRU_C = 8.0
+CONV_WIDTH = 4
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RGLRUState:
+    h: jax.Array     # (B, dr) recurrent state
+    conv: jax.Array  # (B, CONV_WIDTH-1, dr) trailing conv inputs
+
+    @staticmethod
+    def init(b: int, dr: int, dtype=jnp.float32):
+        return RGLRUState(h=jnp.zeros((b, dr), jnp.float32),
+                          conv=jnp.zeros((b, CONV_WIDTH - 1, dr), dtype))
+
+
+def _block_diag(w: jax.Array, x: jax.Array) -> jax.Array:
+    """x (..., dr) @ block-diagonal w (nb, dr/nb, dr/nb) -> (..., dr)."""
+    nb, bs, _ = w.shape
+    xb = x.reshape(*x.shape[:-1], nb, bs)
+    yb = jnp.einsum("...nb,nbc->...nc", xb, w.astype(x.dtype))
+    return yb.reshape(*x.shape)
+
+
+def _gates(p: dict, xc: jax.Array):
+    r = jax.nn.sigmoid(_block_diag(p["wa"], xc) + p["ba"])
+    i = jax.nn.sigmoid(_block_diag(p["wx"], xc) + p["bx"])
+    log_a = (RGLRU_C * r.astype(jnp.float32)
+             * jax.nn.log_sigmoid(p["lambda"].astype(jnp.float32)))
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i.astype(jnp.float32) * xc.astype(jnp.float32))
+    return a, gated_in
+
+
+def _conv1d_seq(p: dict, h: jax.Array) -> jax.Array:
+    """Causal per-channel conv, width CONV_WIDTH, over (B, S, dr)."""
+    w = p["conv_w"].astype(h.dtype)                       # (W, dr)
+    acc = h * w[-1]
+    for i in range(1, CONV_WIDTH):
+        acc = acc + jnp.pad(h, ((0, 0), (i, 0), (0, 0)))[:, :-i] * w[-1 - i]
+    return acc + p["conv_b"].astype(h.dtype)
+
+
+def rglru_block(p: dict, x: jax.Array, ctx: LinearCtx | None = None,
+                name: str = "rglru", return_state: bool = False):
+    """Sequence mode: x (B, S, d) -> (B, S, d) [, RGLRUState]."""
+    g = jax.nn.gelu(linear(p["wg"], x, ctx, f"{name}.wg"))
+    hx = linear(p["wi"], x, ctx, f"{name}.wi")
+    xc = _conv1d_seq(p, hx)
+    a, b = _gates(p, xc)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (g.astype(jnp.float32) * h).astype(x.dtype)
+    y = linear(p["wo"], out, ctx, f"{name}.wo")
+    if return_state:
+        w = rglrumod_conv_tail(hx)
+        return y, RGLRUState(h=h[:, -1], conv=w)
+    return y
+
+
+def rglrumod_conv_tail(hx: jax.Array) -> jax.Array:
+    """Last CONV_WIDTH-1 conv inputs (left-padded for short sequences)."""
+    b, s, dr = hx.shape
+    need = CONV_WIDTH - 1
+    if s >= need:
+        return hx[:, s - need:]
+    pad = jnp.zeros((b, need - s, dr), hx.dtype)
+    return jnp.concatenate([pad, hx], axis=1)
+
+
+def rglru_decode(p: dict, x: jax.Array, state: RGLRUState,
+                 ctx: LinearCtx | None = None, name: str = "rglru"):
+    """One step: x (B, d) -> (out (B, d), new state)."""
+    g = jax.nn.gelu(linear(p["wg"], x, ctx, f"{name}.wg"))
+    hx = linear(p["wi"], x, ctx, f"{name}.wi")             # (B, dr)
+    w = p["conv_w"].astype(hx.dtype)
+    hist = jnp.concatenate([state.conv, hx[:, None, :]], axis=1)  # (B, W, dr)
+    xc = jnp.einsum("bwd,wd->bd", hist, w) + p["conv_b"].astype(hx.dtype)
+    a, b = _gates(p, xc)
+    h_new = a * state.h + b
+    out = (g.astype(jnp.float32) * h_new).astype(x.dtype)
+    out = linear(p["wo"], out, ctx, f"{name}.wo")
+    return out, RGLRUState(h=h_new, conv=hist[:, 1:])

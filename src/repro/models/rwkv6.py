@@ -1,0 +1,175 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): token-shift with data-dependent lerp,
+WKV6 linear recurrence with per-channel data-dependent decay, channel-mix FFN.
+
+Sequence processing uses the chunked linear-attention formulation (GLA/FLA
+style): within-chunk pairwise decays via two matmuls, across-chunk state carry
+via a scan — train/prefill is MXU work, not a length-S scan.  Decode is the
+O(1)-state recurrent step.
+
+Numerics: per-step log-decay is clamped to >= LOG_W_MIN so the within-chunk
+factorized exponentials exp(+/- cumsum(logw)) stay inside f32 range for
+CHUNK steps (contributions decayed below e^{LOG_W_MIN} per step are zero at
+f32 anyway — the same clamp fused GPU kernels apply to keep fp32 state sane).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import LinearCtx, linear
+
+LORA_R = 32      # token-shift ddlerp LoRA rank
+DECAY_R = 64     # decay LoRA rank
+CHUNK = 16
+LOG_W_MIN = -4.5  # with CHUNK=16: exp(-(C-1)*LOG_W_MIN) ~ e^67.5 < f32 max
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RWKVState:
+    """Per-layer recurrent state for decode."""
+    s: jax.Array          # (B, H, dk, dv) wkv state
+    x_prev_tm: jax.Array  # (B, d) last token input to time-mix
+    x_prev_cm: jax.Array  # (B, d) last token input to channel-mix
+
+    @staticmethod
+    def init(b: int, h: int, dk: int, d: int, dtype=jnp.float32):
+        return RWKVState(s=jnp.zeros((b, h, dk, dk), jnp.float32),
+                         x_prev_tm=jnp.zeros((b, d), dtype),
+                         x_prev_cm=jnp.zeros((b, d), dtype))
+
+
+def _ddlerp(p: dict, x: jax.Array, xx: jax.Array):
+    """Data-dependent lerp mixes for (r, k, v, w, g) — RWKV6 token shift."""
+    d = x.shape[-1]
+    base = x + xx * p["mu_x"]
+    low = jnp.tanh(jnp.einsum("...d,dr->...r", base,
+                              p["tm_w1"].reshape(d, 5 * LORA_R)))
+    low = low.reshape(*x.shape[:-1], 5, LORA_R)
+    dyn = jnp.einsum("...fr,frd->...fd", low, p["tm_w2"])   # (..., 5, d)
+    mix = p["mu_rkvwg"] + dyn
+    return [x + xx * mix[..., i, :] for i in range(5)]
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """Per-channel log-decay: logw = -exp(w0 + lora(xw)), clamped."""
+    lora = jnp.einsum("...r,rd->...d",
+                      jnp.tanh(jnp.einsum("...d,dr->...r", xw, p["dw_a"])),
+                      p["dw_b"])
+    logw = -jnp.exp((p["w0"] + lora).astype(jnp.float32))
+    return jnp.clip(logw, LOG_W_MIN, -1e-6)
+
+
+def _project_rkvg(p: dict, xs, ctx, name):
+    xr, xk, xv, xw, xg = xs
+    r = linear(p["wr"], xr, ctx, f"{name}.wr")
+    k = linear(p["wk"], xk, ctx, f"{name}.wk")
+    v = linear(p["wv"], xv, ctx, f"{name}.wv")
+    g = jax.nn.silu(linear(p["wg"], xg, ctx, f"{name}.wg"))
+    logw = _decay(p, xw)
+    return r, k, v, g, logw
+
+
+def _out_proj(p: dict, out: jax.Array, g: jax.Array, ctx, name) -> jax.Array:
+    """Per-head group norm -> gate -> output projection."""
+    b, s, d = out.shape
+    nh = p["u"].shape[0]
+    oh = out.astype(jnp.float32).reshape(b, s, nh, d // nh)
+    mu = jnp.mean(oh, axis=-1, keepdims=True)
+    var = jnp.var(oh, axis=-1, keepdims=True)
+    oh = (oh - mu) * jax.lax.rsqrt(var + 64e-5)
+    out = oh.reshape(b, s, d) * p["ln_x"].astype(jnp.float32)
+    out = (out * g.astype(jnp.float32)).astype(g.dtype)
+    return linear(p["wo"], out, ctx, f"{name}.wo")
+
+
+def time_mix(p: dict, x: jax.Array, *, n_heads: int, head_dim: int,
+             chunk: int = CHUNK, ctx: LinearCtx | None = None,
+             name: str = "tm", return_state: bool = False):
+    """Parallel (chunked) WKV6 over x (B, S, d) -> (B, S, d).
+
+    With ``return_state`` also returns the final (B, H, dk, dv) wkv state
+    (prefill -> decode handoff)."""
+    b, s, d = x.shape
+    h, dk = n_heads, head_dim
+    x_shift = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xs = _ddlerp(p, x, x_shift - x)
+    r, k, v, g, logw = _project_rkvg(p, xs, ctx, name)
+    u = p["u"].astype(jnp.float32)                           # (h, dk)
+
+    nc = -(-s // chunk)
+    sp = nc * chunk
+    pad = ((0, 0), (0, sp - s), (0, 0))
+
+    def heads(a):
+        return jnp.moveaxis(jnp.pad(a, pad).reshape(b, nc, chunk, h, dk),
+                            1, 0).astype(jnp.float32)        # (nc,b,C,h,dk)
+
+    rs, ks, vs = heads(r), heads(k), heads(v)
+    lw = heads(logw)
+    # padding rows get logw = 0 => w = 1: state preserved, outputs discarded
+    la = jnp.cumsum(lw, axis=2)                              # inclusive log-cumprod
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+
+    def chunk_step(state, inputs):                           # state (b,h,dk,dk)
+        rc, kc, vc, lac, lwc = inputs                        # (b,C,h,dk)
+        la_prev = lac - lwc                                  # exclusive cumsum
+        q_dec = rc * jnp.exp(la_prev)                        # <= |r|
+        k_inv = kc * jnp.exp(-lac)                           # bounded via clamp
+        scores = jnp.einsum("bchk,bshk->bhcs", q_dec, k_inv) * tri
+        out = jnp.einsum("bhcs,bshv->bchv", scores, vc)      # intra, s < t
+        diag = jnp.einsum("bchk,bchk->bch", rc * u[None, None], kc)
+        out = out + diag[..., None] * vc                     # u-bonus (s = t)
+        out = out + jnp.einsum("bchk,bhkv->bchv", q_dec, state)  # inter
+        la_end = lac[:, -1]                                  # (b,h,dk)
+        k_carry = kc * jnp.exp(la_end[:, None] - lac)        # <= |k|
+        state = (state * jnp.exp(la_end)[..., None]
+                 + jnp.einsum("bshk,bshv->bhkv", k_carry, vc))
+        return state, out
+
+    s0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+    s_final, outs = jax.lax.scan(chunk_step, s0, (rs, ks, vs, la, lw))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sp, h * dk)[:, :s]
+    y = _out_proj(p, out, g, ctx, name)
+    if return_state:
+        return y, s_final
+    return y
+
+
+def time_mix_decode(p: dict, x: jax.Array, state: RWKVState, *, n_heads: int,
+                    head_dim: int, ctx: LinearCtx | None = None,
+                    name: str = "tm"):
+    """One token: x (B, d) -> (out (B, d), new wkv state + shift reg)."""
+    b, d = x.shape
+    h, dk = n_heads, head_dim
+    xs = _ddlerp(p, x, state.x_prev_tm - x)
+    r, k, v, g, logw = _project_rkvg(p, xs, ctx, name)
+    w = jnp.exp(logw.astype(jnp.float32)).reshape(b, h, dk)
+    rh = r.astype(jnp.float32).reshape(b, h, dk)
+    kh = k.astype(jnp.float32).reshape(b, h, dk)
+    vh = v.astype(jnp.float32).reshape(b, h, dk)
+    u = p["u"].astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    out = jnp.einsum("bhk,bhkv->bhv", rh, state.s + u[None, :, :, None] * kv)
+    s_new = state.s * w[..., None] + kv
+    out = _out_proj(p, out.reshape(b, 1, h * dk), g.reshape(b, 1, d), ctx, name)
+    return out[:, 0], dataclasses.replace(state, s=s_new, x_prev_tm=x)
+
+
+def channel_mix(p: dict, x: jax.Array, x_prev: jax.Array | None = None,
+                ctx: LinearCtx | None = None, name: str = "cm") -> jax.Array:
+    """RWKV6 channel-mix. Sequence mode (B,S,d) when x_prev is None, else one
+    step (B,d) with the explicit shift register."""
+    if x_prev is None:
+        xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        xs = x_prev
+    xx = xs - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(linear(p["ck"], xk, ctx, f"{name}.ck")))
+    kv = linear(p["cv"], k, ctx, f"{name}.cv")
+    return jax.nn.sigmoid(linear(p["cr"], xr, ctx, f"{name}.cr")) * kv

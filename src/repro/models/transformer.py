@@ -1,0 +1,414 @@
+"""The composable LM stack: init / forward / loss / prefill / decode for every
+assigned architecture, with scan-over-layers (grouped by the mixer pattern's
+period) for compile-time sanity at 60-layer scale, and an unrolled mode for
+calibration (LinearCtx taps) and tiny-model debugging.
+
+Canonical param layout (also the checkpoint/sharding layout):
+
+  params = {
+    "embed":      (V, d),
+    "layers":     [stack_0, ..., stack_{p-1}],   # p = cfg.scan_period
+    "enc_layers": [stack_0]                      # whisper only
+    "final_norm": {...}, ["enc_norm": {...}],
+    "lm_head":    (d, V),
+  }
+
+``layers[j]`` stacks every layer with index = j (mod p) along a leading axis
+(n_j entries).  Execution order i = 0..L-1 maps to (stack i % p, element
+i // p); lax.scan runs the first L // p full periods, the remainder is
+unrolled.  Homogeneous models (p = 1) reduce to one stack of L.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attnmod
+from . import ffn as ffnmod
+from . import mla as mlamod
+from . import moe as moemod
+from . import rglru as rglrumod
+from . import rwkv6 as rwkvmod
+from .common import (LinearCtx, apply_mrope, apply_norm, apply_rope,
+                     cross_entropy, dense_init, linear, norm_params, rms_norm,
+                     sinusoidal_positions, split_keys)
+from .config import ModelConfig
+
+# ============================================================ initialization
+
+
+def _init_attn(cfg: ModelConfig, key, dtype, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = split_keys(key, 4)
+    p = {"wq": dense_init(ks[0], d, h * hd, dtype),
+         "wk": dense_init(ks[1], d, kv * hd, dtype),
+         "wv": dense_init(ks[2], d, kv * hd, dtype),
+         "wo": dense_init(ks[3], h * hd, d, dtype, scale=(h * hd) ** -0.5)}
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _init_mla(cfg: ModelConfig, key, dtype) -> dict:
+    m = cfg.mla
+    d = cfg.d_model
+    ks = split_keys(key, 5)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora, dtype),
+        "q_norm": jnp.ones((m.q_lora,), jnp.float32),
+        "wq_b": dense_init(ks[1], m.q_lora, m.n_heads * (m.qk_nope + m.qk_rope), dtype),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora + m.qk_rope, dtype),
+        "kv_norm": jnp.ones((m.kv_lora,), jnp.float32),
+        "wkv_b": dense_init(ks[3], m.kv_lora, m.n_heads * (m.qk_nope + m.v_head), dtype),
+        "wo": dense_init(ks[4], m.n_heads * m.v_head, d, dtype,
+                         scale=(m.n_heads * m.v_head) ** -0.5),
+    }
+
+
+def _init_ffn(cfg: ModelConfig, key, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    if cfg.ffn_kind() == "gelu":
+        return {"wi": dense_init(k1, d, f, dtype),
+                "wo": dense_init(k2, f, d, dtype, scale=f ** -0.5)}
+    return {"wi": dense_init(k1, d, 2 * f, dtype),
+            "wo": dense_init(k2, f, d, dtype, scale=f ** -0.5)}
+
+
+def _init_moe(cfg: ModelConfig, key, dtype) -> dict:
+    mo = cfg.moe
+    d, fe = cfg.d_model, mo.d_ff_expert
+    ks = split_keys(key, 5)
+    p = {"router": dense_init(ks[0], d, mo.n_experts, jnp.float32),
+         "wi": (jax.random.normal(ks[1], (mo.n_experts, d, 2 * fe), jnp.float32)
+                * d ** -0.5).astype(dtype),
+         "wo": (jax.random.normal(ks[2], (mo.n_experts, fe, d), jnp.float32)
+                * fe ** -0.5).astype(dtype)}
+    if mo.n_shared:
+        fs = fe * mo.n_shared
+        p["swi"] = dense_init(ks[3], d, 2 * fs, dtype)
+        p["swo"] = dense_init(ks[4], fs, d, dtype, scale=fs ** -0.5)
+    return p
+
+
+def _init_rwkv_tm(cfg: ModelConfig, key, dtype) -> dict:
+    d = cfg.d_model
+    h, dk = cfg.n_heads, cfg.hd
+    ks = split_keys(key, 10)
+    return {
+        "mu_x": jnp.full((d,), 0.5, jnp.float32),
+        "mu_rkvwg": jnp.full((5, d), 0.5, jnp.float32),
+        "tm_w1": dense_init(ks[0], d, 5 * rwkvmod.LORA_R, dtype, scale=1e-2),
+        "tm_w2": (jax.random.normal(ks[1], (5, rwkvmod.LORA_R, d), jnp.float32)
+                  * 1e-2).astype(dtype),
+        "w0": jnp.zeros((d,), jnp.float32),
+        "dw_a": dense_init(ks[2], d, rwkvmod.DECAY_R, dtype, scale=1e-2),
+        "dw_b": dense_init(ks[3], rwkvmod.DECAY_R, d, dtype, scale=1e-2),
+        "u": jnp.zeros((h, dk), jnp.float32),
+        "ln_x": jnp.ones((d,), jnp.float32),
+        "wr": dense_init(ks[4], d, d, dtype),
+        "wk": dense_init(ks[5], d, d, dtype),
+        "wv": dense_init(ks[6], d, d, dtype),
+        "wg": dense_init(ks[7], d, d, dtype),
+        "wo": dense_init(ks[8], d, d, dtype),
+    }
+
+
+def _init_rwkv_cm(cfg: ModelConfig, key, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, 3)
+    return {"mu_k": jnp.full((d,), 0.5, jnp.float32),
+            "mu_r": jnp.full((d,), 0.5, jnp.float32),
+            "ck": dense_init(ks[0], d, f, dtype),
+            "cv": dense_init(ks[1], f, d, dtype, scale=f ** -0.5),
+            "cr": dense_init(ks[2], d, d, dtype)}
+
+
+def _init_rglru(cfg: ModelConfig, key, dtype) -> dict:
+    d = cfg.d_model
+    dr = cfg.rglru_width or d
+    nb = cfg.n_heads
+    bs = dr // nb
+    ks = split_keys(key, 5)
+    return {
+        "wg": dense_init(ks[0], d, dr, dtype),
+        "wi": dense_init(ks[1], d, dr, dtype),
+        "conv_w": (jax.random.normal(ks[2], (rglrumod.CONV_WIDTH, dr),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "wa": (jax.random.normal(ks[3], (nb, bs, bs), jnp.float32)
+               * bs ** -0.5).astype(dtype),
+        "ba": jnp.full((dr,), 2.0, jnp.float32),   # bias toward remembering
+        "bx": jnp.zeros((dr,), jnp.float32),
+        "wx": (jax.random.normal(ks[4], (nb, bs, bs), jnp.float32)
+               * bs ** -0.5).astype(dtype),
+        "lambda": jnp.linspace(2.0, 5.0, dr, dtype=jnp.float32),
+        "wo": dense_init(jax.random.fold_in(key, 7), dr, d, dtype,
+                         scale=dr ** -0.5),
+    }
+
+
+def _init_layer(cfg: ModelConfig, mixer: str, key, dtype,
+                cross: bool = False, encoder: bool = False) -> dict:
+    k1, k2, k3 = split_keys(key, 3)
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": norm_params(cfg.norm, d),
+                         "ln2": norm_params(cfg.norm, d)}
+    if mixer == "attn":
+        p["attn"] = _init_attn(cfg, k1, dtype)
+    elif mixer == "mla":
+        p["mla"] = _init_mla(cfg, k1, dtype)
+    elif mixer == "rwkv":
+        p["tm"] = _init_rwkv_tm(cfg, k1, dtype)
+    elif mixer == "rglru":
+        p["rglru"] = _init_rglru(cfg, k1, dtype)
+    else:
+        raise ValueError(mixer)
+    fk = cfg.ffn_kind()
+    if fk == "moe":
+        p["moe"] = _init_moe(cfg, k2, dtype)
+    elif fk == "cm":
+        p["cm"] = _init_rwkv_cm(cfg, k2, dtype)
+    else:
+        p["mlp"] = _init_ffn(cfg, k2, dtype)
+    if cross:
+        p["ln_x"] = norm_params(cfg.norm, d)
+        p["xattn"] = _init_attn(cfg, k3, dtype, cross=True)
+    return p
+
+
+def _stack(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    pat = cfg.pattern
+    p_period = cfg.scan_period
+    keys = split_keys(key, cfg.n_layers + cfg.n_enc_layers + 3)
+    per_layer = [_init_layer(cfg, pat[i], keys[i], dtype,
+                             cross=cfg.enc_dec) for i in range(cfg.n_layers)]
+    stacks = []
+    for j in range(p_period):
+        stacks.append(_stack(per_layer[j::p_period]))
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "layers": stacks,
+        "final_norm": norm_params(cfg.norm, cfg.d_model),
+        "lm_head": dense_init(keys[-2], cfg.d_model, cfg.vocab, dtype),
+    }
+    if cfg.enc_dec:
+        enc_layers = [_init_layer(cfg, "attn", keys[cfg.n_layers + i], dtype,
+                                  encoder=True) for i in range(cfg.n_enc_layers)]
+        params["enc_layers"] = [_stack(enc_layers)]
+        params["enc_norm"] = norm_params(cfg.norm, cfg.d_model)
+    return params
+
+
+# ================================================================== blocks
+
+
+def _qk_normalize(p: dict, q, k):
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k
+
+
+def _attn_seq(cfg: ModelConfig, p: dict, x: jax.Array, positions,
+              ctx, name, *, causal=True, window=None, kv_src=None,
+              use_rope=True) -> jax.Array:
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    src = x if kv_src is None else kv_src
+    sk = src.shape[1]
+    q = linear(p["wq"], x, ctx, f"{name}.wq").reshape(b, s, h, hd)
+    k = linear(p["wk"], src, ctx, f"{name}.wk").reshape(b, sk, kv, hd)
+    v = linear(p["wv"], src, ctx, f"{name}.wv").reshape(b, sk, kv, hd)
+    q, k = _qk_normalize(p, q, k)
+    if use_rope and cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif use_rope and cfg.pos == "mrope":
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    out = attnmod.flash_attention(q, k, v, causal=causal, window=window,
+                                  remat_chunks=cfg.remat_attention,
+                                  expand_kv=cfg.expand_kv)
+    return linear(p["wo"], out.reshape(b, s, h * hd), ctx, f"{name}.wo")
+
+
+def _ffn_apply(cfg: ModelConfig, lp: dict, h2: jax.Array, ctx, name):
+    fk = cfg.ffn_kind()
+    if fk == "moe":
+        return moemod.moe_ffn(lp["moe"], h2, n_experts=cfg.moe.n_experts,
+                              top_k=cfg.moe.top_k,
+                              capacity_factor=cfg.moe.capacity_factor,
+                              act=cfg.act, ctx=ctx, name=f"{name}.moe")
+    if fk == "cm":
+        return rwkvmod.channel_mix(lp["cm"], h2, None, ctx, f"{name}.cm"), 0.0
+    if fk == "gelu":
+        return ffnmod.gelu_ffn(lp["mlp"], h2, ctx, f"{name}.mlp"), 0.0
+    return ffnmod.glu_ffn(lp["mlp"], h2, act=cfg.act, ctx=ctx,
+                          name=f"{name}.mlp"), 0.0
+
+
+def layer_seq(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
+              positions, ctx=None, name: str = "layer",
+              encoder_out: jax.Array | None = None, causal: bool = True):
+    """One full layer in sequence mode. Returns (h, aux_loss)."""
+    hn = apply_norm(cfg.norm, h, lp["ln1"])
+    if mixer == "attn":
+        window = cfg.window if causal else None
+        mix = _attn_seq(cfg, lp["attn"], hn, positions, ctx, f"{name}.attn",
+                        causal=causal, window=window)
+    elif mixer == "mla":
+        mix = mlamod.mla_full(lp["mla"], hn, cfg.mla, positions, ctx,
+                              f"{name}.mla",
+                              remat_chunks=cfg.remat_attention)
+    elif mixer == "rwkv":
+        mix = rwkvmod.time_mix(lp["tm"], hn, n_heads=cfg.n_heads,
+                               head_dim=cfg.hd, ctx=ctx, name=f"{name}.tm")
+    elif mixer == "rglru":
+        mix = rglrumod.rglru_block(lp["rglru"], hn, ctx, f"{name}.rglru")
+    else:
+        raise ValueError(mixer)
+    h = h + mix.astype(h.dtype)
+    if encoder_out is not None:
+        hx = apply_norm(cfg.norm, h, lp["ln_x"])
+        h = h + _attn_seq(cfg, lp["xattn"], hx, positions, ctx,
+                          f"{name}.xattn", causal=False, kv_src=encoder_out,
+                          use_rope=False)
+    h2 = apply_norm(cfg.norm, h, lp["ln2"])
+    y, aux = _ffn_apply(cfg, lp, h2, ctx, name)
+    from repro.runtime.actsharding import shard_hidden
+    return shard_hidden(h + y.astype(h.dtype)), aux
+
+
+# ================================================================ forward
+
+
+def get_layer(params: dict, jpos: int, idx: int):
+    """Layer params: stacked tree (fp training) or python list (quantized
+    models with heterogeneous per-layer bit widths)."""
+    st = params["layers"][jpos]
+    if isinstance(st, list):
+        return st[idx]
+    return jax.tree.map(lambda a: a[idx], st)
+
+
+def layers_scannable(params: dict) -> bool:
+    return not any(isinstance(st, list) for st in params["layers"])
+
+
+def embed_tokens(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _default_positions(cfg: ModelConfig, b: int, s: int, offset=0):
+    pos = offset + jnp.arange(s, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.pos == "mrope":
+        return jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def encode(cfg: ModelConfig, params: dict, enc_embeds: jax.Array,
+           ctx=None, scan: bool = True) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, T, d)."""
+    b, t, d = enc_embeds.shape
+    h = enc_embeds + sinusoidal_positions(t, d).astype(enc_embeds.dtype)[None]
+    stack = params["enc_layers"][0]
+    if isinstance(stack, list):
+        scan, n = False, len(stack)
+    else:
+        n = jax.tree.leaves(stack)[0].shape[0]
+    if scan:
+        def body(carry, lp):
+            hh, aux = carry
+            hh, a = layer_seq(cfg, "attn", lp, hh, None, None, "enc",
+                              causal=False)
+            return (hh, aux + a), None
+        (h, _), _ = jax.lax.scan(body, (h, 0.0), stack)
+    else:
+        for i in range(n):
+            lp = (stack[i] if isinstance(stack, list)
+                  else jax.tree.map(lambda a: a[i], stack))
+            h, _ = layer_seq(cfg, "attn", lp, h, None, ctx, f"enc{i}",
+                             causal=False)
+    return apply_norm(cfg.norm, h, params["enc_norm"])
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array | None = None,
+            *, embeds: jax.Array | None = None, positions=None,
+            encoder_out: jax.Array | None = None,
+            enc_embeds: jax.Array | None = None,
+            ctx: Optional[LinearCtx] = None, scan: bool = True):
+    """Sequence-mode forward -> (logits (B, S, V), aux_loss)."""
+    h = embeds if embeds is not None else embed_tokens(cfg, params, tokens)
+    b, s, d = h.shape
+    if cfg.enc_dec and encoder_out is None:
+        assert enc_embeds is not None, "whisper needs encoder frames"
+        encoder_out = encode(cfg, params, enc_embeds, ctx=ctx, scan=scan)
+    if cfg.pos == "sinusoidal":
+        h = h + sinusoidal_positions(s, d).astype(h.dtype)[None]
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+
+    pat = cfg.pattern
+    p_period = cfg.scan_period
+    stacks = params["layers"]
+    n_full = cfg.n_layers // p_period
+    rem = cfg.n_layers % p_period
+    aux_total = jnp.float32(0.0)
+    scan = scan and layers_scannable(params)
+
+    if scan and n_full > 0:
+        full_stacks = [jax.tree.map(lambda a: a[:n_full], st) for st in stacks]
+
+        def body(carry, lps):
+            hh, aux = carry
+            for j in range(p_period):
+                hh, a = layer_seq(cfg, pat[j], lps[j], hh, positions, None,
+                                  "blk", encoder_out=encoder_out)
+                aux = aux + a
+            return (hh, aux), None
+
+        (h, aux_total), _ = jax.lax.scan(body, (h, aux_total),
+                                         tuple(full_stacks))
+        for j in range(rem):
+            lp = jax.tree.map(lambda a: a[n_full], stacks[j])
+            h, a = layer_seq(cfg, pat[j], lp, h, positions, None,
+                             f"rem{j}", encoder_out=encoder_out)
+            aux_total = aux_total + a
+    else:
+        for i in range(cfg.n_layers):
+            jpos, idx = i % p_period, i // p_period
+            lp = get_layer(params, jpos, idx)
+            h, a = layer_seq(cfg, pat[i], lp, h, positions, ctx, f"L{i}",
+                             encoder_out=encoder_out)
+            aux_total = aux_total + a
+    h = apply_norm(cfg.norm, h, params["final_norm"])
+    logits = linear(params["lm_head"], h, ctx, "lm_head")
+    return logits, aux_total
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
+            ctx: Optional[LinearCtx] = None, scan: bool = True) -> jax.Array:
+    """Mean next-token NLL (+ MoE aux).  batch: tokens (B, S+1) [+ extras]."""
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    positions = batch.get("positions")
+    if positions is not None:
+        positions = positions[..., : inputs.shape[1]]
+    logits, aux = forward(cfg, params, inputs, positions=positions,
+                          enc_embeds=batch.get("enc_embeds"),
+                          embeds=batch.get("embeds"), ctx=ctx, scan=scan)
+    loss = cross_entropy(logits, labels, batch.get("mask"))
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_coef * aux
+    return loss

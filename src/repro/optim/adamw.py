@@ -1,0 +1,59 @@
+"""AdamW in pure JAX.  Moments are pytrees mirroring params, so they inherit
+whatever sharding the params carry (ZeRO falls out of the sharding rules in
+runtime/sharding.py — moments shard over data AND model axes)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array   # scalar int32
+    mu: dict          # first moment (f32)
+    nu: dict          # second moment (f32)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_update(params, grads, state: AdamWState, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, max_grad_norm: float = 1.0):
+    """One AdamW step; returns (new params, new state, grad norm)."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        mhat = m / b1c
+        vhat = v / b2c
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf)
+        return pf.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), gnorm

@@ -1,0 +1,16 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, peak_lr: float, warmup: int):
+    return peak_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+
+
+def cosine_schedule(step, peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    warm = linear_warmup(step, peak_lr, warmup)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, peak_lr * cos)

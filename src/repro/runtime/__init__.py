@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, step builders, microbatching,
+gradient compression, fault tolerance."""

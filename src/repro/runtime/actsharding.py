@@ -1,0 +1,29 @@
+"""Opt-in activation sharding constraints (perf variants, §Perf).
+
+``POLICY["hidden"]`` — a PartitionSpec applied to the (B, S, d) hidden states
+after embedding and after every layer.  Sequence sharding over the model axis
+(P(dp, "model", None)) turns prefill into sequence-parallel execution: norms
+and MLPs run on S/16 shards and the partitioner materializes gathers only
+around attention, instead of resharding ad hoc per op.
+Module-level (not threaded through model code) because it is a launcher
+decision, set once before lowering.
+"""
+from __future__ import annotations
+
+import jax
+
+POLICY: dict = {}
+
+
+def shard_named(x, key: str):
+    spec = POLICY.get(key)
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def shard_hidden(h):
+    return shard_named(h, "hidden")

@@ -1,0 +1,74 @@
+"""Gradient compression for cross-pod all-reduce bandwidth.
+
+Two pieces:
+  * ``compress_decompress_grads`` — int8 per-tensor symmetric quantization of
+    gradients applied inside the jitted step.  Under GSPMD the all-reduce
+    happens on the *compressed-then-decompressed* values; the compression
+    models the quality impact (what matters for convergence testing).  On a
+    real fleet the same transform pairs with a shard_map all-reduce over int8
+    payloads (see ``int8_psum`` below) for the actual 4x wire saving.
+  * ``ErrorFeedback`` — residual accumulation so quantization error is
+    re-injected next step (1-bit Adam / EF-SGD style), keeping convergence
+    close to exact all-reduce even at int8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(g: jax.Array):
+    a = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(a, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress_grads(grads):
+    def one(g):
+        if g.dtype not in (jnp.float32, jnp.bfloat16, jnp.float16):
+            return g
+        q, s = _quantize_int8(g.astype(jnp.float32))
+        return _dequantize_int8(q, s).astype(g.dtype)
+    return jax.tree.map(one, grads)
+
+
+class ErrorFeedback:
+    """Stateful error-feedback wrapper (host-side pytree of residuals)."""
+
+    def __init__(self, params_like):
+        self.residual = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params_like)
+
+    def apply(self, grads):
+        def one(g, r):
+            gf = g.astype(jnp.float32) + r
+            q, s = _quantize_int8(gf)
+            deq = _dequantize_int8(q, s)
+            return deq.astype(g.dtype), gf - deq
+        out = jax.tree.map(one, grads, self.residual)
+        grads_c = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        self.residual = jax.tree.map(lambda t: t[1], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        return grads_c
+
+
+def int8_psum(x: jax.Array, axis_name: str):
+    """shard_map building block: all-reduce an int8-quantized payload.
+
+    Quantize -> psum int32 (wire: 1B/elem payload + 4B accumulator semantics;
+    on TPU the reduce runs over the int payload) -> rescale by the max of the
+    per-shard scales.  Unbiased up to the shared-scale approximation.
+    """
+    q, s = _quantize_int8(x.astype(jnp.float32))
+    s_max = jax.lax.pmax(s, axis_name)
+    # re-quantize against the shared scale so the integer sum is coherent
+    q2 = jnp.clip(jnp.round(x.astype(jnp.float32) / s_max), -127, 127
+                  ).astype(jnp.int32)
+    total = jax.lax.psum(q2, axis_name)
+    return total.astype(jnp.float32) * s_max

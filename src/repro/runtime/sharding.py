@@ -1,0 +1,171 @@
+"""GSPMD sharding rules (DESIGN.md §5).
+
+Axes: (pod?, data, model).  Batch shards over all data-parallel axes
+("pod"+"data"); weights shard FSDP(ZeRO-3)-style over "data" and
+tensor-parallel over "model" for training, model-only for serving (no
+per-token all-gathers); MoE experts shard over "model" when divisible
+(expert parallelism), falling back to intra-expert TP otherwise; KV caches
+shard batch over dp and sequence over "model" (flash-decoding style partial
+softmax combine is then inserted by XLA).
+
+Every rule passes through ``_fit`` which drops any axis that does not divide
+the dimension — rules degrade to replication rather than failing, so tiny
+smoke configs and odd head counts (yi's 56 heads) stay valid.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _fit(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec entries that don't divide the corresponding dim."""
+    out = []
+    for i, dim in enumerate(shape):
+        ax = spec[i] if i < len(spec) else None
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        out.append(ax)
+    return P(*out)
+
+
+def _leaf_key(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _in_moe(path) -> bool:
+    return any(getattr(e, "key", None) == "moe" for e in path)
+
+
+# weight keys whose 2-D layout is (d_in, d_out) -> FSDP d_in, TP d_out
+_COL_KEYS = {"wq", "wk", "wv", "wi", "swi", "wg", "wr", "ck", "cr",
+             "wq_a", "wq_b", "wkv_a", "wkv_b", "embed"}
+# (d_hidden, d_model) down-projections -> TP d_in, FSDP d_out
+_ROW_KEYS = {"wo", "swo", "cv", "lm_head"}
+
+
+# serve-mode EP weights also shard their inner dim over "data" when the
+# per-chip residue after model-axis EP exceeds this (deepseek-v2's 450 GB of
+# experts do not fit 16 chips; mixtral's 94 GB do) — §Perf iteration D1.
+SERVE_EP_INNER_SHARD_LIMIT = 8 * 2 ** 30
+
+
+def _param_rule(key: str, shape, mesh: Mesh, path, serve: bool) -> P:
+    dp = dp_axes(mesh)
+    fsdp = None if serve else "data"
+    nd = len(shape)
+    if _in_moe(path) and key in ("wi", "wo") and nd in (3, 4):
+        # stacked (L, E, a, b) or unstacked (E, a, b) expert weights
+        lead = (None,) * (nd - 3)
+        e = shape[nd - 3]
+        if e % mesh.shape["model"] == 0:
+            # expert parallelism on model; shard inner dim over data (ZeRO /
+            # fit) when training or when the EP residue still breaks HBM
+            per_chip = 2 * np.prod(shape) / mesh.shape["model"]
+            inner = ("data" if not serve
+                     or per_chip > SERVE_EP_INNER_SHARD_LIMIT else None)
+            return _fit(P(*lead, "model", None, inner), shape, mesh)
+        return _fit(P(*lead, None, "data" if not serve else None, "model"),
+                    shape, mesh)
+    if key == "router":
+        return P(*([None] * nd))
+    if key in _COL_KEYS and nd >= 2:
+        lead = (None,) * (nd - 2)
+        return _fit(P(*lead, fsdp, "model"), shape, mesh)
+    if key in _ROW_KEYS and nd >= 2:
+        lead = (None,) * (nd - 2)
+        return _fit(P(*lead, "model", fsdp), shape, mesh)
+    return P(*([None] * nd))  # norms, biases, LoRAs, convs: replicated
+
+
+def param_specs(params: Any, mesh: Mesh, serve: bool = False):
+    """PartitionSpec tree for a (possibly quantized) param tree."""
+
+    def rule(path, leaf):
+        key = _leaf_key(path)
+        shape = tuple(leaf.shape)
+        # quantized leaves: shard packed codes / rescale like the weight
+        names = [str(getattr(e, "key", getattr(e, "name", ""))) for e in path]
+        if "packed" in names or "rescale" in names:
+            # find the owning weight's key (the dict key above the dataclass)
+            wkey = ""
+            for n in names:
+                if n in _COL_KEYS | _ROW_KEYS | {"wi", "wo"}:
+                    wkey = n
+            nd = len(shape)
+            if nd >= 2:
+                lead = (None,) * (nd - 2)
+                if "rescale" in names[-1:]:
+                    return _fit(P(*((None,) * (nd - 1)), "model"), shape, mesh)
+                return _fit(P(*lead, None, "model"), shape, mesh)
+            return P(*([None] * nd))
+        if any(n in ("signs1", "signs2", "mean_col", "w_out", "out_idx",
+                     "keep_idx") for n in names):
+            return P(*([None] * len(shape)))
+        return _param_rule(key, shape, mesh, path, serve)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_specs(batch: Any, mesh: Mesh):
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        key = _leaf_key(path)
+        shape = tuple(leaf.shape)
+        if key == "positions":               # (3, B, S)
+            return _fit(P(None, dp, None), shape, mesh)
+        if key == "pos" or len(shape) == 0:
+            return P()
+        return _fit(P(dp, *([None] * (len(shape) - 1))), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+def cache_specs(caches: Any, mesh: Mesh):
+    """(n_j, B, S?, ...) cache leaves: batch over dp, dim-2 over model."""
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if nd <= 1:
+            return P(*([None] * nd))
+        spec = [None, dp] + [None] * (nd - 2)
+        if nd >= 4:
+            spec[2] = "model"                 # sequence / capacity axis
+        return _fit(P(*spec), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, caches)
+
+
+def replicate_specs(tree: Any):
+    return jax.tree.map(lambda l: P(*([None] * getattr(l, "ndim", 0))), tree)
+
+
+def named(tree_specs: Any, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

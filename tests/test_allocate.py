@@ -1,0 +1,57 @@
+"""AllocateBits: DP optimality vs brute force (Alg. 4), GCD trick, budgets."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import allocate
+
+
+@settings(deadline=None, max_examples=30)
+@given(n=st.integers(2, 6), seed=st.integers(0, 2**31 - 1),
+       avg=st.sampled_from([2.0, 3.5, 5.0]))
+def test_dp_matches_brute_force(n, seed, avg):
+    rng = np.random.default_rng(seed)
+    alphas = rng.uniform(0.1, 20.0, n)
+    m = (rng.integers(1, 9, n) * 64).tolist()
+    budget = int(avg * sum(m))
+    bits = [1, 2, 3, 4, 6, 8]
+    dp = allocate.allocate_bits(alphas, m, budget, bits)
+    bf = allocate.brute_force_allocate(alphas, m, budget, bits)
+    assert abs(dp.objective - bf.objective) < 1e-9 * max(1, bf.objective)
+    assert dp.total_bits <= budget
+
+
+def test_budget_respected_and_sensitive_layers_win():
+    # layer 0 is 100x more sensitive -> must get >= bits of layer 1
+    res = allocate.allocate_bits([100.0, 1.0], [256, 256], 6 * 512,
+                                 [1, 2, 3, 4, 6, 8])
+    assert res.bits[0] >= res.bits[1]
+    assert res.total_bits <= 6 * 512
+
+
+def test_gcd_trick_reduces_problem():
+    m = [4096 * 4096] * 8
+    res = allocate.allocate_bits([1.0] * 8, m, 4 * sum(m), [2, 4, 8])
+    assert res.gcd >= 4096 * 4096          # all m equal => gcd = m
+    assert res.n_slots <= 8 * 8
+
+
+def test_infeasible_budget_raises():
+    with pytest.raises(ValueError):
+        allocate.allocate_bits([1.0, 1.0], [128, 128], 100, [2, 4])
+
+
+def test_equal_sensitivity_uniform_allocation():
+    res = allocate.allocate_for_avg_bits([5.0] * 4, [512] * 4, 4.0,
+                                         [1, 2, 3, 4, 5, 6, 7, 8])
+    assert res.bits == [4, 4, 4, 4]
+
+
+def test_coarsening_safeguard():
+    # coprime sizes -> g = 1 -> slots would exceed cap -> coarsened budget
+    m = [999983, 999979, 1000003]          # primes
+    res = allocate.allocate_bits([1.0, 2.0, 3.0], m, 4 * sum(m), [2, 4, 8])
+    assert res.total_bits <= 4 * sum(m)
+    assert res.n_slots <= allocate._MAX_SLOTS

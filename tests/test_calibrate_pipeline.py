@@ -1,0 +1,97 @@
+"""Calibration (eq. 23) + full RaanA pipeline behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import calibrate as cal
+from repro.core import pipeline as pipe
+from repro.models import transformer as tf
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_tiny("llama2-7b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    batches = [{"tokens": jax.random.randint(jax.random.PRNGKey(i),
+                                             (1, 49), 0, cfg.vocab)}
+               for i in range(2)]
+    lwc = lambda p, b, ctx: tf.loss_fn(cfg, p, b, ctx=ctx, scan=False)
+    stats = cal.calibrate(lwc, params, batches)
+    return cfg, params, stats
+
+
+def test_calibration_covers_all_linears(setup):
+    cfg, params, stats = setup
+    # 4 layers x (wq wk wv wo wi(mlp) wo(mlp)) + lm_head
+    assert len(stats) == cfg.n_layers * 6 + 1
+    for st in stats.values():
+        assert st.alpha > 0
+        assert np.isfinite(st.alpha)
+        assert st.x_col_sq.shape == (st.d,)
+        assert (st.x_col_sq >= 0).all()
+
+
+def test_zero_shot_tokens_valid():
+    toks = cal.zero_shot_tokens(256, 512)
+    assert toks.shape == (1, 513)
+    assert toks.min() >= 0 and toks.max() < 256
+
+
+def test_quantize_model_budget_and_quality(setup):
+    cfg, params, stats = setup
+    test_batch = {"tokens": jax.random.randint(jax.random.PRNGKey(9),
+                                               (2, 49), 0, cfg.vocab)}
+    base = float(tf.loss_fn(cfg, params, test_batch))
+    losses = {}
+    for avg in (8.3, 2.3):
+        qp, rep = pipe.quantize_model(cfg, params, stats, avg,
+                                      jax.random.PRNGKey(1))
+        assert rep.avg_bits <= avg + 0.02       # budget respected
+        assert rep.avg_bits > avg - 1.0
+        losses[avg] = float(tf.loss_fn(cfg, qp, test_batch, scan=False))
+    # 8-bit must be near-lossless; at random init 2.3 bits only needs to stay
+    # in the same regime (trained-model ordering is covered by test_system)
+    assert abs(losses[8.3] - base) < 0.02 * abs(base)
+    assert abs(losses[2.3] - base) < 0.2 * abs(base)
+
+
+def test_quantized_tree_structure(setup):
+    cfg, params, stats = setup
+    from repro.core.qlinear import QuantizedLinear
+    qp, rep = pipe.quantize_model(cfg, params, stats, 4.3,
+                                  jax.random.PRNGKey(2))
+    assert isinstance(qp["layers"][0], list)
+    lp0 = qp["layers"][0][0]
+    assert isinstance(lp0["attn"]["wq"], QuantizedLinear)
+    # norms untouched
+    assert isinstance(lp0["ln1"]["scale"], jax.Array)
+    # embed / lm_head untouched
+    assert not isinstance(qp["embed"], QuantizedLinear)
+    assert not isinstance(qp["lm_head"], QuantizedLinear)
+    assert rep.n_layers == len(stats) - 1      # lm_head excluded
+
+
+def test_uniform_quantization_scannable():
+    cfg = registry.get_tiny("mixtral-8x7b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(3))
+    qp = pipe.quantize_params_uniform(cfg, params, 4, jax.random.PRNGKey(4))
+    assert tf.layers_scannable(qp)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(5), (2, 17), 0,
+                                          cfg.vocab)}
+    l_scan = tf.loss_fn(cfg, qp, batch, scan=True)
+    l_unrl = tf.loss_fn(cfg, qp, batch, scan=False)
+    np.testing.assert_allclose(l_scan, l_unrl, rtol=2e-4, atol=2e-4)
+    assert bool(jnp.isfinite(l_scan))
+
+
+def test_uniform_quantization_under_eval_shape():
+    cfg = registry.get_tiny("deepseek-v2-236b")
+    sds = jax.eval_shape(
+        lambda: pipe.quantize_params_uniform(
+            cfg, tf.init_params(cfg, jax.random.PRNGKey(0)), 4,
+            jax.random.PRNGKey(1)))
+    leaves = jax.tree.leaves(sds)
+    assert all(hasattr(l, "shape") for l in leaves)
+    assert any(l.dtype == jnp.uint8 for l in leaves)   # packed codes exist

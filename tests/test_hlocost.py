@@ -1,0 +1,78 @@
+"""The loop-aware HLO cost parser (launch/hlocost.py) — the roofline's
+measurement tool — validated against programs with known flop counts."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlocost import analyze_hlo
+
+
+def _analyze(fn, *args):
+    return analyze_hlo(jax.jit(fn).lower(*args).compile().as_text())
+
+
+def test_single_matmul_exact():
+    x = jnp.ones((128, 128))
+    r = _analyze(lambda x: x @ x, x)
+    assert abs(r["flops"] - 2 * 128 ** 3) / (2 * 128 ** 3) < 1e-6
+
+
+@pytest.mark.parametrize("k", [1, 3, 9])
+def test_scan_trip_counts(k):
+    x = jnp.ones((64, 64))
+    r = _analyze(
+        lambda x: jax.lax.scan(lambda c, _: (c @ c, None), x, None,
+                               length=k)[0], x)
+    expect = 2 * 64 ** 3 * k
+    assert abs(r["flops"] - expect) / expect < 1e-6
+    assert r["unknown_trip_whiles"] == 0
+
+
+def test_grad_of_scan():
+    x = jnp.ones((64, 64))
+
+    def loss(x):
+        y, _ = jax.lax.scan(lambda c, _: (jnp.tanh(c @ c), None), x, None,
+                            length=5)
+        return jnp.sum(y)
+
+    r = _analyze(jax.grad(loss), x)
+    expect = 2 * 64 ** 3 * 5 * 3          # fwd + 2x bwd matmuls
+    assert abs(r["flops"] - expect) / expect < 1e-6
+
+
+def test_nested_scans_multiply():
+    x = jnp.ones((32, 32))
+
+    def nested(x):
+        def outer(c, _):
+            c2, _ = jax.lax.scan(lambda d, _: (d @ d, None), c, None,
+                                 length=3)
+            return c2, None
+        return jax.lax.scan(outer, x, None, length=4)[0]
+
+    r = _analyze(nested, x)
+    expect = 2 * 32 ** 3 * 12
+    assert abs(r["flops"] - expect) / expect < 1e-6
+
+
+def test_bytes_scale_with_trips():
+    x = jnp.ones((64, 64))
+    r1 = _analyze(lambda x: jax.lax.scan(
+        lambda c, _: (c @ c, None), x, None, length=2)[0], x)
+    r2 = _analyze(lambda x: jax.lax.scan(
+        lambda c, _: (c @ c, None), x, None, length=8)[0], x)
+    assert r2["bytes"] > 3 * r1["bytes"]
+
+
+def test_dryrun_collective_parser_on_text():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ar = bf16[128,256] all-reduce(%x), replica_groups={{0,1},{2,3}}
+  %ag.1 = f32[64,64] all-gather(%y), dimensions={0}
+  %done = f32[8] all-reduce-done(%st)
+"""
+    r = collective_bytes(hlo)
+    assert r["bytes_by_kind"]["all-reduce"] == 128 * 256 * 2
+    assert r["bytes_by_kind"]["all-gather"] == 64 * 64 * 4
+    assert r["counts"]["all-reduce"] == 1   # -done not double counted

@@ -1,0 +1,89 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hadamard as hcore
+from repro.core import packing, rabitq
+from repro.kernels.hadamard.hadamard import rht_pallas
+from repro.kernels.hadamard.ref import rht_ref
+from repro.kernels.qmatmul.qmatmul import quantized_matmul_pallas
+from repro.kernels.qmatmul.ref import quantized_matmul_ref
+from repro.kernels.rabitq_quant.quantize import quantize_pallas
+
+
+@pytest.mark.parametrize("bits,n,d,c", [
+    (1, 5, 256, 33), (2, 33, 700, 130), (3, 9, 300, 50),
+    (4, 64, 512, 96), (4, 1, 4096, 16), (8, 17, 1024, 64),
+])
+def test_qmatmul_kernel_vs_ref(bits, n, d, c):
+    key = jax.random.PRNGKey(bits * 1000 + d)
+    w = jax.random.normal(key, (d, c))
+    q = rabitq.quantize(w, bits)
+    p = packing.pack_codes(q.codes, bits)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    ref = quantized_matmul_ref(x, p, q.rescale, bits=bits, d=d)
+    out = quantized_matmul_pallas(x, p, q.rescale, bits=bits, d=d,
+                                  interpret=True)
+    np.testing.assert_allclose(out, ref, rtol=1e-4,
+                               atol=1e-4 * float(jnp.abs(ref).max() + 1))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qmatmul_kernel_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (512, 64))
+    q = rabitq.quantize(w, 4)
+    p = packing.pack_codes(q.codes, 4)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (16, 512)).astype(dtype)
+    ref = quantized_matmul_ref(x.astype(jnp.float32), p, q.rescale,
+                               bits=4, d=512)
+    out = quantized_matmul_pallas(x, p, q.rescale, bits=4, d=512,
+                                  interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out, ref, rtol=tol,
+                               atol=tol * float(jnp.abs(ref).max() + 1))
+
+
+@pytest.mark.parametrize("n,d", [(16, 1024), (7, 4096), (3, 256), (1, 16384)])
+def test_hadamard_kernel_vs_ref(n, d):
+    key = jax.random.PRNGKey(d)
+    x = jax.random.normal(key, (n, d))
+    s = hcore.rademacher(jax.random.fold_in(key, 1), d)
+    out = rht_pallas(x, s, interpret=True)
+    ref = rht_ref(x, s)
+    np.testing.assert_allclose(out, ref, atol=2e-4)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("d,c", [(777, 91), (2048, 16)])
+def test_rabitq_quant_kernel_vs_ref(bits, d, c):
+    w = jax.random.normal(jax.random.PRNGKey(bits + d), (d, c))
+    ck, rk = quantize_pallas(w, bits=bits, interpret=True)
+    q = rabitq.quantize(w, bits)
+    # exact code equality up to boundary ties (x.5 rounding under fused vs
+    # unfused f32 arithmetic); mismatches must be rare and off-by-one
+    diff = np.asarray(ck).astype(int) - np.asarray(q.codes).astype(int)
+    assert np.abs(diff).max() <= 1
+    assert (diff != 0).mean() < 5e-3
+    np.testing.assert_allclose(rk, q.rescale, rtol=5e-3, atol=1e-5)
+
+
+def test_ops_dispatch_paths():
+    """The ops wrappers must agree across forced paths."""
+    from repro.kernels.qmatmul import ops as qops
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (300, 40))
+    q = rabitq.quantize(w, 4)
+    p = packing.pack_codes(q.codes, 4)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 6, 300))
+    try:
+        qops.set_forced_path("ref")
+        y_ref = qops.quantized_matmul(x, p, q.rescale, bits=4, d=300)
+        qops.set_forced_path("pallas")
+        y_pal = qops.quantized_matmul(x, p, q.rescale, bits=4, d=300)
+    finally:
+        qops.set_forced_path(None)
+    assert y_ref.shape == (4, 6, 40)
+    np.testing.assert_allclose(y_ref, y_pal, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,94 @@
+"""Chunked/parallel recurrences vs naive per-step references (RWKV6 WKV,
+RG-LRU associative scan)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import rglru as rgl
+from repro.models import rwkv6 as rw
+from repro.models.transformer import _init_rglru, _init_rwkv_tm
+from repro.configs import registry
+
+
+def test_wkv6_chunked_matches_recurrent():
+    cfg = registry.get_tiny("rwkv6-3b")
+    p = _init_rwkv_tm(cfg, jax.random.PRNGKey(0), jnp.float32)
+    b, s, d = 2, 37, cfg.d_model           # s deliberately not chunk-aligned
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+    y_par = rw.time_mix(p, x, n_heads=cfg.n_heads, head_dim=cfg.hd)
+    # naive recurrence via the decode step
+    st = rw.RWKVState.init(b, cfg.n_heads, cfg.hd, d)
+    outs = []
+    for t in range(s):
+        o, st = rw.time_mix_decode(p, x[:, t], st, n_heads=cfg.n_heads,
+                                   head_dim=cfg.hd)
+        outs.append(o)
+    y_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(y_par, y_seq, rtol=2e-3, atol=2e-3)
+
+
+def test_wkv6_state_handoff():
+    cfg = registry.get_tiny("rwkv6-3b")
+    p = _init_rwkv_tm(cfg, jax.random.PRNGKey(2), jnp.float32)
+    b, s, d = 1, 24, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, s, d)) * 0.5
+    _, s_final = rw.time_mix(p, x, n_heads=cfg.n_heads, head_dim=cfg.hd,
+                             return_state=True)
+    st = rw.RWKVState.init(b, cfg.n_heads, cfg.hd, d)
+    for t in range(s):
+        _, st = rw.time_mix_decode(p, x[:, t], st, n_heads=cfg.n_heads,
+                                   head_dim=cfg.hd)
+    np.testing.assert_allclose(s_final, st.s, rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_scan_matches_step():
+    cfg = registry.get_tiny("recurrentgemma-2b")
+    p = _init_rglru(cfg, jax.random.PRNGKey(4), jnp.float32)
+    b, s, d = 2, 19, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(5), (b, s, d)) * 0.5
+    y_par, st_final = rgl.rglru_block(p, x, return_state=True)
+    st = rgl.RGLRUState.init(b, cfg.rglru_width or d)
+    outs = []
+    for t in range(s):
+        o, st = rgl.rglru_decode(p, x[:, t], st)
+        outs.append(o)
+    y_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(y_par, y_seq, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st_final.h, st.h, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st_final.conv, st.conv, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_matches_naive():
+    from repro.models.attention import flash_attention
+    b, s, h, kv, hd = 2, 50, 4, 2, 16
+    key = jax.random.PRNGKey(6)
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+    out = flash_attention(q, k, v, causal=True, q_chunk=16, k_chunk=16)
+    # naive reference
+    g = h // kv
+    qf = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, k) * hd ** -0.5
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.einsum("bkgqs,bskd->bqkgd", probs, v).reshape(b, s, h, hd)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_window_matches_naive():
+    from repro.models.attention import flash_attention
+    b, s, h, hd, w = 1, 40, 2, 8, 7
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd))
+    out = flash_attention(q, k, v, causal=True, window=w, q_chunk=8,
+                          k_chunk=8)
+    pos = jnp.arange(s)
+    mask = (pos[None, :] <= pos[:, None]) & (pos[:, None] - pos[None, :] < w)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k) * hd ** -0.5
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    ref = jnp.einsum("bhqs,bshd->bqhd", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)

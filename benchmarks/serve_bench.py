@@ -1,5 +1,7 @@
 """Serving throughput fp vs RaanA-quantized (container-scale proxy for the
-paper's §1 memory-bandwidth claim) + weight-bytes-resident accounting."""
+paper's §1 memory-bandwidth claim) + weight-bytes-resident accounting, with a
+fused-vs-unfused decode A/B: the quantized model is served once through the
+fused RHT+qmatmul dispatch and once with the legacy two-kernel composition."""
 from __future__ import annotations
 
 import time
@@ -8,6 +10,7 @@ import jax
 import numpy as np
 
 from repro.core import pipeline as pipe
+from repro.kernels.qmatmul import ops as qops
 from repro.launch.serve import BatchedServer
 
 from .common import Row, calib_batches, run_stats, trained_model
@@ -36,4 +39,11 @@ def run(row: Row, gen: int = 16, requests: int = 4):
     stats = run_stats(cfg, params, calib_batches(cfg, corpus, False))
     qp, rep = pipe.quantize_model(cfg, params, stats, 4.3,
                                   jax.random.PRNGKey(0))
-    bench(qp, "raana_4.3b")
+    prev = qops.fused_enabled()
+    try:
+        qops.set_fused(True)
+        bench(qp, "raana_4.3b_fused")
+        qops.set_fused(False)
+        bench(qp, "raana_4.3b_unfused")
+    finally:
+        qops.set_fused(prev)

@@ -107,14 +107,10 @@ def rht(x: jax.Array, signs: jax.Array, axis: int = -1) -> jax.Array:
 
 def rht_inverse(y: jax.Array, signs: jax.Array, axis: int = -1) -> jax.Array:
     """Inverse of ``rht``: x = D Hadamard(y)  (H orthonormal involution)."""
-    axis = axis % x_ndim(y)
+    axis = axis % y.ndim
     shape = [1] * y.ndim
     shape[axis] = y.shape[axis]
     return fwht(y, axis=axis) * signs.reshape(shape).astype(y.dtype)
-
-
-def x_ndim(x) -> int:
-    return x.ndim
 
 
 def _apply_block(x: jax.Array, signs: jax.Array, axis: int, start: int, d_hat: int,

@@ -164,8 +164,7 @@ def quantize_model(cfg: ModelConfig, params: dict,
         key, sub = jax.random.split(key)
         if kind == "grouped":
             q = quantize_grouped(w, bits, sub, n_candidates=n_candidates)
-            overhead_used += 16 * q.rescale.size + q.signs1.size + (
-                q.signs2.size if q.signs2 is not None else 0)
+            overhead_used += q.overhead_bits()
         else:
             st = stats.get(name)
             x_col = (np.sqrt(np.maximum(st.x_col_sq, 0.0))

@@ -26,11 +26,11 @@ __all__ = ["QuantizedLinear", "quantize_linear", "reconstruct_weight",
 class QuantizedLinear:
     # --- dynamic leaves ---
     packed: jax.Array                 # (packed_rows(d_keep), c) uint8
-    rescale: jax.Array                # (c,) f32
+    rescale: jax.Array                # (c,) f16
     signs1: jax.Array                 # (d_hat,) f32 (+/-1)
     signs2: Optional[jax.Array]       # (d_hat,) f32 or None (d_keep a pow2)
-    mean_col: Optional[jax.Array]     # (d_keep,) f32 (centralization) or None
-    w_out: Optional[jax.Array]        # (k, c) fp outlier rows or None
+    mean_col: Optional[jax.Array]     # (d_keep,) f16 (centralization) or None
+    w_out: Optional[jax.Array]        # (k, c) f16 outlier rows or None
     out_idx: Optional[jax.Array]      # (k,) int32 or None
     keep_idx: Optional[jax.Array]     # (d_keep,) int32 or None (k == 0)
     # --- static metadata ---
@@ -48,18 +48,23 @@ class QuantizedLinear:
         return jnp.float32
 
     def overhead_bits(self) -> int:
-        """Side-information cost in bits (counted against the budget)."""
-        n = self.rescale.size * 16 + self.signs1.size
+        """Side-information cost in bits, at actual storage width (counted
+        against the AllocateBits budget; signs are 1 bit each)."""
+        n = self.rescale.size * self.rescale.dtype.itemsize * 8 + self.signs1.size
         if self.signs2 is not None:
             n += self.signs2.size
         if self.mean_col is not None:
-            n += self.mean_col.size * 16
+            n += self.mean_col.size * self.mean_col.dtype.itemsize * 8
         if self.w_out is not None:
-            n += self.w_out.size * 16 + self.out_idx.size * 32
+            n += (self.w_out.size * self.w_out.dtype.itemsize * 8
+                  + self.out_idx.size * 32)
         return int(n)
 
     def apply(self, x: jax.Array) -> jax.Array:
-        """Estimate x @ W for x of shape (..., d) — Alg. 3 + trick corrections."""
+        """Estimate x @ W for x of shape (..., d) — Alg. 3 + trick corrections.
+
+        The RHT + dequant GEMM is one fused dispatch (kernels/qmatmul/ops):
+        rotated activations stay in VMEM on the kernel path."""
         lead = x.shape[:-1]
         x2 = x.reshape(-1, self.d).astype(jnp.float32)
         if self.out_idx is not None and self.out_idx.size:
@@ -69,11 +74,11 @@ class QuantizedLinear:
             x_out, x_rest = None, x2
         y = jnp.zeros((x2.shape[0], self.c), jnp.float32)
         if self.mean_col is not None:
-            y = y + (x_rest @ self.mean_col)[:, None]
-        xr = hadamard.practical_rht(x_rest, self.signs1, self.signs2, axis=-1)
+            y = y + (x_rest @ self.mean_col.astype(jnp.float32))[:, None]
         from repro.kernels.qmatmul import ops as qops  # late: avoid cycle
-        y = y + qops.quantized_matmul(xr, self.packed, self.rescale,
-                                      bits=self.bits, d=self.d_keep)
+        y = y + qops.rht_quantized_matmul(x_rest, self.packed, self.rescale,
+                                          self.signs1, self.signs2,
+                                          bits=self.bits, d=self.d_keep)
         if x_out is not None:
             y = y + x_out @ self.w_out.astype(jnp.float32)
         return y.reshape(*lead, self.c)
@@ -111,9 +116,13 @@ def quantize_linear(w: jax.Array, bits: int, key: jax.Array,
     # 4) extended RaBitQ
     q = rabitq.quantize(w_rot, bits, n_candidates=n_candidates)
     packed = packing.pack_codes(q.codes, bits)
+    # side info lives in f16 so overhead_bits' 16-bit count is the real cost
     return QuantizedLinear(
-        packed=packed, rescale=q.rescale, signs1=signs1, signs2=signs2,
-        mean_col=mean_col, w_out=w_out,
+        packed=packed, rescale=q.rescale.astype(jnp.float16),
+        signs1=signs1, signs2=signs2,
+        mean_col=(mean_col.astype(jnp.float16)
+                  if mean_col is not None else None),
+        w_out=w_out.astype(jnp.float16) if w_out is not None else None,
         out_idx=jnp.asarray(out_idx) if has_out else None,
         keep_idx=jnp.asarray(keep_idx) if has_out else None,
         bits=bits, d=d, d_keep=d_keep, c=c)
@@ -130,7 +139,7 @@ class QuantizedGrouped:
     lifting; noted in DESIGN.md.
     """
     packed: jax.Array            # (E, packed_rows(d), c) uint8
-    rescale: jax.Array           # (E, c) f32
+    rescale: jax.Array           # (E, c) f16
     signs1: jax.Array            # (d_hat,)
     signs2: Optional[jax.Array]
     bits: int = dataclasses.field(metadata=dict(static=True), default=4)
@@ -141,16 +150,22 @@ class QuantizedGrouped:
     def shape(self):
         return (self.packed.shape[0], self.d, self.c)
 
+    def overhead_bits(self) -> int:
+        """Side-information cost in bits, at actual storage width."""
+        n = self.rescale.size * self.rescale.dtype.itemsize * 8 + self.signs1.size
+        if self.signs2 is not None:
+            n += self.signs2.size
+        return int(n)
+
     def apply(self, xbuf: jax.Array) -> jax.Array:
-        """xbuf (E, C, d) -> (E, C, c): per-expert Alg. 3 estimate."""
-        xr = hadamard.practical_rht(xbuf.astype(jnp.float32), self.signs1,
-                                    self.signs2, axis=-1)
-        codes = jax.vmap(lambda p: packing.unpack_codes(p, self.bits, self.d))(
-            self.packed).astype(jnp.float32)                     # (E, d, c)
-        c_b = ((1 << self.bits) - 1) / 2.0
-        y = jnp.einsum("ecd,edf->ecf", xr, codes)
-        z = c_b * jnp.sum(xr, axis=-1, keepdims=True)            # (E, C, 1)
-        return (y - z) * self.rescale[:, None, :]
+        """xbuf (E, C, d) -> (E, C, c): per-expert Alg. 3 estimate.
+
+        Routes through the fused RHT+qmatmul dispatch (vmapped over experts);
+        codes stay packed — no dense (E, d, c) dequant buffer is ever built."""
+        from repro.kernels.qmatmul import ops as qops  # late: avoid cycle
+        return qops.grouped_rht_quantized_matmul(
+            xbuf.astype(jnp.float32), self.packed, self.rescale,
+            self.signs1, self.signs2, bits=self.bits, d=self.d)
 
 
 def quantize_grouped(w: jax.Array, bits: int, key: jax.Array,
@@ -168,7 +183,8 @@ def quantize_grouped(w: jax.Array, bits: int, key: jax.Array,
         return packing.pack_codes(q.codes, bits), q.rescale
 
     packed, rescale = jax.lax.map(quant_one, w_rot)
-    return QuantizedGrouped(packed=packed, rescale=rescale, signs1=signs1,
+    return QuantizedGrouped(packed=packed,
+                            rescale=rescale.astype(jnp.float16), signs1=signs1,
                             signs2=signs2, bits=bits, d=d, c=c)
 
 

@@ -1,20 +1,29 @@
-"""Dispatching wrapper for the fused dequant GEMM.
+"""Dispatching wrapper for the fused dequant GEMM — the single chokepoint the
+decode hot path (QuantizedLinear / QuantizedGrouped -> serve/decode) routes
+through.
 
 Paths:
   * TPU          -> real pallas_call (compiled kernel),
   * tests        -> pallas_call(interpret=True) (bit-exact kernel semantics),
   * CPU / dryrun -> pure-jnp reference (same math; interpret-mode would be
                     pointlessly slow inside a 512-way SPMD dry-run compile).
+
+Fusion: by default the practical RHT (Alg. 5) is applied *inside* the qmatmul
+kernel (``rht_quantized_matmul``) so rotated activations never round-trip
+through HBM between the Hadamard stage and the dequant GEMM.  ``set_fused``
+toggles the legacy two-kernel composition for A/B benchmarking
+(benchmarks/serve_bench.py reports both).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .qmatmul import quantized_matmul_pallas
-from .ref import quantized_matmul_ref
+from .qmatmul import quantized_matmul_pallas, rht_quantized_matmul_pallas
+from .ref import quantized_matmul_ref, rht_quantized_matmul_ref
 
 _FORCE_PATH: str | None = None  # "pallas" | "ref" | None (auto) — tests poke this
+_FUSE_RHT: bool = True          # fused decode path on/off (serve bench A/Bs this)
 
 
 def set_forced_path(path: str | None) -> None:
@@ -23,17 +32,72 @@ def set_forced_path(path: str | None) -> None:
     _FORCE_PATH = path
 
 
+def set_fused(enabled: bool) -> None:
+    """Toggle RHT+GEMM fusion for the decode path (True = fused, default)."""
+    global _FUSE_RHT
+    _FUSE_RHT = bool(enabled)
+
+
+def fused_enabled() -> bool:
+    return _FUSE_RHT
+
+
+def _resolve_path() -> str:
+    path = _FORCE_PATH
+    if path is None:
+        path = "pallas" if jax.default_backend() == "tpu" else "ref"
+    return path
+
+
 def quantized_matmul(x: jax.Array, packed: jax.Array, rescale: jax.Array,
                      *, bits: int, d: int) -> jax.Array:
     """Estimate X @ (r * (codes - c_b)) for X (..., d) -> (..., c)."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    path = _FORCE_PATH
-    if path is None:
-        path = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if path == "pallas":
+    if _resolve_path() == "pallas":
         y = quantized_matmul_pallas(x2, packed, rescale, bits=bits, d=d,
                                     interpret=jax.default_backend() != "tpu")
     else:
         y = quantized_matmul_ref(x2, packed, rescale, bits=bits, d=d)
     return y.reshape(*lead, y.shape[-1])
+
+
+def rht_quantized_matmul(x: jax.Array, packed: jax.Array, rescale: jax.Array,
+                         signs1: jax.Array, signs2: jax.Array | None,
+                         *, bits: int, d: int) -> jax.Array:
+    """Estimate practical_rht(X) @ (r * (codes - c_b)) for X (..., d).
+
+    The decode hot path: with fusion on, the RHT's Kronecker matmuls happen in
+    VMEM inside the qmatmul kernel; with fusion off, rotated activations are
+    materialized between two kernels (the pre-fusion behavior).
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if not _FUSE_RHT:
+        from repro.kernels.hadamard import ops as hops  # late: avoid cycle
+        xr = hops.practical_rht(x2.astype(jnp.float32), signs1, signs2)
+        return quantized_matmul(xr, packed, rescale, bits=bits, d=d
+                                ).reshape(*lead, -1)
+    if _resolve_path() == "pallas":
+        y = rht_quantized_matmul_pallas(
+            x2, packed, rescale, signs1, signs2, bits=bits, d=d,
+            interpret=jax.default_backend() != "tpu")
+    else:
+        y = rht_quantized_matmul_ref(x2, packed, rescale, signs1, signs2,
+                                     bits=bits, d=d)
+    return y.reshape(*lead, y.shape[-1])
+
+
+def grouped_rht_quantized_matmul(x: jax.Array, packed: jax.Array,
+                                 rescale: jax.Array, signs1: jax.Array,
+                                 signs2: jax.Array | None,
+                                 *, bits: int, d: int) -> jax.Array:
+    """Per-expert fused estimate: x (E, C, d), packed (E, pr, c),
+    rescale (E, c) -> (E, C, c).  Signs are shared across experts (same input
+    space), so the whole MoE FFN is one vmap over the fused kernel — packed
+    codes stay packed; no dense (E, d, c) dequant buffer exists at any point.
+    """
+    return jax.vmap(
+        lambda xe, pe, re: rht_quantized_matmul(
+            xe, pe, re, signs1, signs2, bits=bits, d=d)
+    )(x, packed, rescale)

@@ -23,9 +23,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.hadamard import _split_dim, hadamard_matrix, largest_pow2_leq
+
 DEFAULT_BN = 128
 DEFAULT_BC = 128
 DEFAULT_BK = 512
+
+
+def _unpack_tile(packed: jax.Array, bits: int) -> jax.Array:
+    """(bk//per, bc) uint8 -> (bk, bc) uint8 via VPU shift/mask."""
+    per = 8 // bits if bits in (1, 2, 4, 8) else 1
+    if per == 1:
+        return packed
+    mask = jnp.uint8((1 << bits) - 1)
+    parts = [((packed >> jnp.uint8(s * bits)) & mask) for s in range(per)]
+    return jnp.stack(parts, axis=1).reshape(-1, packed.shape[-1])
 
 
 def _kernel(x_ref, packed_ref, rescale_ref, out_ref, acc_ref, zacc_ref,
@@ -38,15 +50,7 @@ def _kernel(x_ref, packed_ref, rescale_ref, out_ref, acc_ref, zacc_ref,
         zacc_ref[...] = jnp.zeros_like(zacc_ref)
 
     x = x_ref[...].astype(compute_dtype)                     # (bn, bk)
-    packed = packed_ref[...]                                 # (bk//per, bc) uint8
-    per = 8 // bits if bits in (1, 2, 4, 8) else 1
-    if per > 1:
-        mask = jnp.uint8((1 << bits) - 1)
-        parts = [((packed >> jnp.uint8(s * bits)) & mask) for s in range(per)]
-        codes = jnp.stack(parts, axis=1).reshape(-1, packed.shape[-1])
-    else:
-        codes = packed
-    codes = codes.astype(compute_dtype)                      # (bk, bc)
+    codes = _unpack_tile(packed_ref[...], bits).astype(compute_dtype)  # (bk, bc)
     acc_ref[...] += jnp.dot(x, codes, preferred_element_type=jnp.float32)
     zacc_ref[...] += jnp.sum(x.astype(jnp.float32), axis=1, keepdims=True)
 
@@ -94,4 +98,125 @@ def quantized_matmul_pallas(x: jax.Array, packed: jax.Array, rescale: jax.Array,
         ],
         interpret=interpret,
     )(xp, pp, rp)
+    return out[:n, :c]
+
+
+# ===================================================== fused RHT + qmatmul
+
+
+def _rht_rows(x, signs, h1, h2, *, d1: int, d2: int):
+    """H_{d1*d2} (D x) for a VMEM row tile x (bn, d1*d2); signs (1, d1*d2).
+
+    Same Kronecker two-matmul factorization as kernels/hadamard, inlined so
+    the rotated tile never leaves VMEM before the quantized GEMM consumes it.
+    """
+    x = x * signs
+    bn = x.shape[0]
+    xr = x.reshape(bn * d1, d2)
+    xr = jnp.dot(xr, h2, preferred_element_type=jnp.float32)           # H_{d2}
+    xr = xr.reshape(bn, d1, d2).swapaxes(1, 2).reshape(bn * d2, d1)
+    xr = jnp.dot(xr, h1, preferred_element_type=jnp.float32)           # H_{d1}
+    return xr.reshape(bn, d2, d1).swapaxes(1, 2).reshape(bn, d1 * d2)
+
+
+def _fused_kernel(x_ref, signs1_ref, signs2_ref, h1_ref, h2_ref, packed_ref,
+                  rescale_ref, out_ref, xrot_ref, acc_ref, zacc_ref,
+                  *, bits: int, n_k: int, bk: int, d: int, d_hat: int,
+                  d1: int, d2: int, overlapped: bool, compute_dtype):
+    j, k = pl.program_id(1), pl.program_id(2)
+
+    # Rotate once per row block (first (j, k) visit); the (bn, d_pad) result
+    # stays resident in VMEM scratch for the whole (j, k) sweep — rotated
+    # activations never touch HBM (Alg. 3 fused with Alg. 5).
+    @pl.when((j == 0) & (k == 0))
+    def _rotate():
+        xf = x_ref[...].astype(jnp.float32)                  # (bn, d_pad)
+        blk1 = _rht_rows(xf[:, :d_hat], signs1_ref[...], h1_ref[...],
+                         h2_ref[...], d1=d1, d2=d2)
+        row = (jnp.concatenate([blk1, xf[:, d_hat:]], axis=1)
+               if xf.shape[1] > d_hat else blk1)
+        if overlapped:                                       # Alg. 5, d not pow2
+            lo = d - d_hat
+            blk2 = _rht_rows(row[:, lo:d], signs2_ref[...], h1_ref[...],
+                             h2_ref[...], d1=d1, d2=d2)
+            row = jnp.concatenate([row[:, :lo], blk2, row[:, d:]], axis=1)
+        xrot_ref[...] = row
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        zacc_ref[...] = jnp.zeros_like(zacc_ref)
+
+    x = xrot_ref[:, pl.ds(k * bk, bk)].astype(compute_dtype)            # (bn, bk)
+    codes = _unpack_tile(packed_ref[...], bits).astype(compute_dtype)   # (bk, bc)
+    acc_ref[...] += jnp.dot(x, codes, preferred_element_type=jnp.float32)
+    zacc_ref[...] += jnp.sum(x.astype(jnp.float32), axis=1, keepdims=True)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        c_b = ((1 << bits) - 1) / 2.0
+        r = rescale_ref[...].astype(jnp.float32)             # (1, bc)
+        out_ref[...] = ((acc_ref[...] - c_b * zacc_ref[...]) * r).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "d", "bn", "bc", "bk",
+                                             "interpret", "compute_dtype"))
+def rht_quantized_matmul_pallas(x: jax.Array, packed: jax.Array,
+                                rescale: jax.Array, signs1: jax.Array,
+                                signs2: jax.Array | None, *, bits: int, d: int,
+                                bn: int = DEFAULT_BN, bc: int = DEFAULT_BC,
+                                bk: int = DEFAULT_BK, interpret: bool = True,
+                                compute_dtype=jnp.float32) -> jax.Array:
+    """Y = practical_rht(x) @ (r * (codes - c_b)) without the HBM round trip.
+
+    x (n, d) f32/bf16, packed (packed_rows, c) uint8, rescale (c,),
+    signs1/signs2 (d_hat,) Rademacher (signs2 None iff d is a power of 2).
+    """
+    n, _ = x.shape
+    c = packed.shape[1]
+    d_hat = largest_pow2_leq(d)
+    d1, d2 = _split_dim(d_hat)
+    overlapped = d_hat != d
+    if overlapped and signs2 is None:
+        raise ValueError("signs2 required when d is not a power of 2")
+    if signs2 is None:
+        signs2 = jnp.zeros((d_hat,), jnp.float32)            # dead input
+    per = 8 // bits if bits in (1, 2, 4, 8) else 1
+    assert bk % per == 0 and bk % 128 == 0
+    d_pad = pl.cdiv(d, bk) * bk
+    n_pad = pl.cdiv(n, bn) * bn
+    c_pad = pl.cdiv(c, bc) * bc
+    xp = jnp.zeros((n_pad, d_pad), x.dtype).at[:n, :d].set(x)
+    pp = jnp.zeros((d_pad // per, c_pad), jnp.uint8)
+    pp = pp.at[: packed.shape[0], :c].set(packed)
+    rp = jnp.zeros((1, c_pad), rescale.dtype).at[0, :c].set(rescale)
+    h1 = hadamard_matrix(d1)
+    h2 = hadamard_matrix(d2)
+    n_k = d_pad // bk
+    grid = (n_pad // bn, c_pad // bc, n_k)
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, bits=bits, n_k=n_k, bk=bk, d=d,
+                          d_hat=d_hat, d1=d1, d2=d2, overlapped=overlapped,
+                          compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            # same block for every (j, k) -> fetched from HBM once per row block
+            pl.BlockSpec((bn, d_pad), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, d_hat), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, d_hat), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((d1, d1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((d2, d2), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((bk // per, bc), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bc), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bc), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, c_pad), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bn, d_pad), jnp.float32),  # rotated activations
+            pltpu.VMEM((bn, bc), jnp.float32),     # f32 accumulator
+            pltpu.VMEM((bn, 1), jnp.float32),      # rowsum for the z term
+        ],
+        interpret=interpret,
+    )(xp, signs1.reshape(1, d_hat).astype(jnp.float32),
+      signs2.reshape(1, d_hat).astype(jnp.float32), h1, h2, pp, rp)
     return out[:n, :c]

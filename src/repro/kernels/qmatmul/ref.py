@@ -1,10 +1,10 @@
-"""Pure-jnp oracle for the fused dequant GEMM (paper Alg. 3)."""
+"""Pure-jnp oracles for the (RHT-)fused dequant GEMM (paper Alg. 3 / Alg. 5)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import packing
+from repro.core import hadamard, packing
 
 
 def quantized_matmul_ref(x: jax.Array, packed: jax.Array, rescale: jax.Array,
@@ -15,3 +15,12 @@ def quantized_matmul_ref(x: jax.Array, packed: jax.Array, rescale: jax.Array,
     x = x.astype(jnp.float32)
     y = x @ codes - c_b * jnp.sum(x, axis=-1, keepdims=True)
     return y * rescale[None, :].astype(jnp.float32)
+
+
+def rht_quantized_matmul_ref(x: jax.Array, packed: jax.Array,
+                             rescale: jax.Array, signs1: jax.Array,
+                             signs2: jax.Array | None, *, bits: int,
+                             d: int) -> jax.Array:
+    """Unfused composition the fused kernel must match: Alg. 5 then Alg. 3."""
+    xr = hadamard.practical_rht(x.astype(jnp.float32), signs1, signs2, axis=-1)
+    return quantized_matmul_ref(xr, packed, rescale, bits=bits, d=d)

@@ -6,18 +6,23 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis types where the installed JAX
+    has them (>= 0.5); older releases only have Auto semantics anyway."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(at.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever this host actually has (smoke tests: 1 CPU device)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+    return _make_mesh((n, 1), ("data", "model"))

@@ -1,6 +1,11 @@
 """Batched serving driver: prefill + decode loop over a request batch, with
 optional RaanA-quantized weights — the deployment artifact of the paper.
 
+Quantized decode routes every linear through the fused RHT+qmatmul dispatch
+(repro.kernels.qmatmul.ops): rotated activations stay in VMEM next to the
+packed-code GEMM.  ``--unfused`` restores the two-kernel composition (RHT
+round-trips through HBM) for A/B measurement.
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --tiny \
       --avg-bits 3.3 --requests 8 --gen 32
 """
@@ -17,6 +22,7 @@ from repro.configs.registry import get_config, get_tiny
 from repro.core import calibrate as cal
 from repro.core import pipeline as pipe
 from repro.data import ByteTokenizer
+from repro.kernels.qmatmul import ops as qops
 from repro.models import decode as decmod
 from repro.models import transformer as tf
 
@@ -66,7 +72,10 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--unfused", action="store_true",
+                    help="disable RHT+qmatmul fusion (A/B baseline)")
     args = ap.parse_args()
+    qops.set_fused(not args.unfused)
 
     cfg = get_tiny(args.arch) if args.tiny else get_config(args.arch)
     key = jax.random.PRNGKey(0)
@@ -91,8 +100,9 @@ def main():
     t0 = time.time()
     out = server.generate(prompts, args.gen)
     dt = time.time() - t0
+    path = "unfused" if args.unfused else "fused"
     print(f"served {args.requests} requests x {args.gen} tokens in {dt:.2f}s "
-          f"({args.requests*args.gen/dt:.1f} tok/s)")
+          f"({args.requests*args.gen/dt:.1f} tok/s, {path} decode path)")
     print("sample:", tok.decode(out[0])[:80])
 
 

@@ -6,6 +6,12 @@ position, so decode scans layers and caches together.  Sliding-window archs
 get ring-buffered KV caches (capacity = window); attention-free mixers carry
 O(1) recurrent state — which is precisely why they are the archs that can
 serve the long_500k cell (DESIGN.md §4).
+
+Quantized decode is memory-bound: every linear here dispatches (via
+``common.linear`` / ``moe._expert_matmul``) to the fused RHT+qmatmul kernel
+(DESIGN.md §6), so single-token weights move HBM->VMEM packed at b/16 of the
+bf16 cost and the rotation happens in VMEM — no rotated-activation round trip
+between kernels.
 """
 from __future__ import annotations
 

@@ -21,7 +21,9 @@ from .common import LinearCtx, linear
 def _expert_matmul(w, xbuf: jax.Array, ctx: LinearCtx | None = None,
                    name: str | None = None) -> jax.Array:
     """Grouped GEMM (E,C,d)x(E,d,f) with QuantizedGrouped dispatch and the
-    same calibration taps/perturbations as ``common.linear``."""
+    same calibration taps/perturbations as ``common.linear``.  Quantized
+    experts go through the fused RHT+qmatmul kernel vmapped over E — per-
+    expert codes stay packed; no dense (E, d, f) dequant buffer exists."""
     if isinstance(w, QuantizedGrouped):
         return w.apply(xbuf).astype(xbuf.dtype)
     y = jnp.einsum("ecd,edf->ecf", xbuf, w.astype(xbuf.dtype))

@@ -1,0 +1,70 @@
+"""Import hypothesis if available, else a minimal fixed-seed fallback.
+
+Tier-1 tests use ``given``/``settings``/``st.integers``/``st.sampled_from``
+for property-style sweeps.  The real hypothesis (requirements-dev.txt) is
+strictly better — shrinking, coverage-guided example generation — but its
+absence must not kill collection: this shim replays a deterministic,
+fixed-seed sample of each strategy so the properties still get exercised.
+
+Usage in test modules (tests/ is on sys.path via pytest rootdir insertion):
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _SEED = 0x5AA9A  # fixed: examples must be identical run-to-run
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # rng -> value
+
+    class st:  # noqa: N801 — mimics `from hypothesis import strategies as st`
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(_SEED)
+                for _ in range(getattr(wrapper, "_max_examples", 10)):
+                    example = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **example, **kwargs)
+            # pytest must not see the given-supplied params as fixtures
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            del wrapper.__dict__["__wrapped__"]
+            return wrapper
+        return deco
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -64,8 +64,8 @@ def test_elastic_remesh(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     t = _tree()
     mgr.save(1, t)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import _make_mesh
+    mesh = _make_mesh((1, 1), ("data", "model"))
     def place(host_arr, like):
         spec = P(*([None] * host_arr.ndim))
         return jax.device_put(host_arr, NamedSharding(mesh, spec))

@@ -1,0 +1,166 @@
+"""Fused RHT+qmatmul decode path: kernel parity vs the unfused composition
+(practical_rht -> quantized_matmul_ref), dispatch paths, and the grouped/MoE
+expert route (which must never unpack codes to a dense (E, d, c) buffer)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hadamard as hcore
+from repro.core import packing, rabitq
+from repro.core.qlinear import quantize_grouped, quantize_linear
+from repro.kernels.qmatmul import ops as qops
+from repro.kernels.qmatmul.qmatmul import rht_quantized_matmul_pallas
+from repro.kernels.qmatmul.ref import (quantized_matmul_ref,
+                                       rht_quantized_matmul_ref)
+
+
+def _quantized_layer(key, d, c, bits):
+    """Packed codes + rescale + shared signs for a random (d, c) weight."""
+    d_hat = hcore.largest_pow2_leq(d)
+    s1 = hcore.rademacher(jax.random.fold_in(key, 1), d_hat)
+    s2 = (hcore.rademacher(jax.random.fold_in(key, 2), d_hat)
+          if d_hat != d else None)
+    w = jax.random.normal(key, (d, c))
+    q = rabitq.quantize(hcore.practical_rht(w, s1, s2, axis=0), bits)
+    return packing.pack_codes(q.codes, bits), q.rescale, s1, s2
+
+
+def _unfused(x, p, r, s1, s2, *, bits, d):
+    xr = hcore.practical_rht(x.astype(jnp.float32), s1, s2, axis=-1)
+    return quantized_matmul_ref(xr, p, r, bits=bits, d=d)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("n,d,c", [
+    (1, 256, 33),     # single-token decode, power-of-2 d
+    (7, 300, 40),     # batched, non-power-of-2 d (overlapped Alg. 5 blocks)
+    (16, 512, 96),
+    (1, 4096, 16),    # single token, large d
+    (5, 96, 24),      # tiny non-power-of-2 d
+    (9, 300, 200),    # c > bc: multiple column tiles (j grid dim + epilogue)
+])
+def test_fused_kernel_matches_unfused(bits, n, d, c):
+    key = jax.random.PRNGKey(bits * 1000 + d + n)
+    p, r, s1, s2 = _quantized_layer(key, d, c, bits)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (n, d))
+    ref = _unfused(x, p, r, s1, s2, bits=bits, d=d)
+    out = rht_quantized_matmul_pallas(x, p, r, s1, s2, bits=bits, d=d,
+                                      interpret=True)
+    np.testing.assert_allclose(out, ref, rtol=1e-4,
+                               atol=1e-4 * float(jnp.abs(ref).max() + 1))
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+def test_fused_ref_matches_unfused(bits):
+    d, c = 300, 40
+    key = jax.random.PRNGKey(bits)
+    p, r, s1, s2 = _quantized_layer(key, d, c, bits)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (4, d))
+    np.testing.assert_allclose(
+        rht_quantized_matmul_ref(x, p, r, s1, s2, bits=bits, d=d),
+        _unfused(x, p, r, s1, s2, bits=bits, d=d), rtol=1e-5, atol=1e-5)
+
+
+def test_dispatch_paths_agree():
+    """Forced pallas / forced ref / unfused toggle must all agree."""
+    d, c, bits = 768, 48, 4
+    key = jax.random.PRNGKey(0)
+    p, r, s1, s2 = _quantized_layer(key, d, c, bits)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (2, 3, d))
+    try:
+        qops.set_forced_path("ref")
+        y_ref = qops.rht_quantized_matmul(x, p, r, s1, s2, bits=bits, d=d)
+        qops.set_forced_path("pallas")
+        y_pal = qops.rht_quantized_matmul(x, p, r, s1, s2, bits=bits, d=d)
+        qops.set_fused(False)
+        y_unf = qops.rht_quantized_matmul(x, p, r, s1, s2, bits=bits, d=d)
+    finally:
+        qops.set_forced_path(None)
+        qops.set_fused(True)
+    assert y_ref.shape == (2, 3, c)
+    np.testing.assert_allclose(y_ref, y_pal, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(y_ref, y_unf, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("d", [128, 300])
+@pytest.mark.parametrize("path", ["ref", "pallas"])
+def test_grouped_fused_matches_per_expert(d, path):
+    """vmapped fused kernel == per-expert unfused composition, and the
+    QuantizedGrouped pytree holds only packed uint8 codes (no dense f32)."""
+    e, c, bits = 3, 40, 4
+    key = jax.random.PRNGKey(d)
+    w = jax.random.normal(key, (e, d, c))
+    qg = quantize_grouped(w, bits, jax.random.fold_in(key, 1))
+    assert qg.packed.dtype == jnp.uint8
+    assert qg.packed.shape == (e, packing.packed_rows(d, bits), c)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (e, 5, d))
+    try:
+        qops.set_forced_path(path)
+        y = qg.apply(x)
+    finally:
+        qops.set_forced_path(None)
+    expect = jnp.stack([
+        _unfused(x[i], qg.packed[i], qg.rescale[i], qg.signs1, qg.signs2,
+                 bits=bits, d=d) for i in range(e)])
+    np.testing.assert_allclose(y, expect, rtol=1e-4,
+                               atol=1e-4 * float(jnp.abs(expect).max() + 1))
+
+
+def test_grouped_apply_never_unpacks_dense():
+    """The jaxpr of QuantizedGrouped.apply must not materialize any
+    (E, d, c)-shaped intermediate — codes travel packed into the kernel."""
+    e, d, c, bits = 4, 256, 32, 4
+    key = jax.random.PRNGKey(7)
+    qg = quantize_grouped(jax.random.normal(key, (e, d, c)), bits,
+                          jax.random.fold_in(key, 1))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (e, 6, d))
+    try:
+        qops.set_forced_path("pallas")
+        jaxpr = jax.make_jaxpr(qg.apply)(x)
+    finally:
+        qops.set_forced_path(None)
+    dense = [v for eqn in jaxpr.jaxpr.eqns for v in eqn.outvars
+             if getattr(v.aval, "shape", None) == (e, d, c)]
+    assert not dense, f"dense (E, d, c) intermediates found: {dense}"
+
+
+@pytest.mark.parametrize("path", ["ref", "pallas"])
+def test_qlinear_apply_with_tricks_across_paths(path):
+    """Full QuantizedLinear.apply (outliers + centralization) through the
+    fused dispatch agrees with the unfused toggle on the same path."""
+    d, c, bits = 300, 32, 4
+    key = jax.random.PRNGKey(9)
+    w = jax.random.normal(key, (d, c))
+    col_norms = np.abs(np.asarray(
+        jax.random.normal(jax.random.fold_in(key, 1), (d,))))
+    q = quantize_linear(w, bits, jax.random.fold_in(key, 2),
+                        x_col_norms=col_norms, outlier_frac=0.01)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (5, d))
+    try:
+        qops.set_forced_path(path)
+        y_fused = q.apply(x)
+        qops.set_fused(False)
+        y_unfused = q.apply(x)
+    finally:
+        qops.set_forced_path(None)
+        qops.set_fused(True)
+    np.testing.assert_allclose(y_fused, y_unfused, rtol=1e-4,
+                               atol=1e-4 * float(jnp.abs(y_unfused).max() + 1))
+
+
+def test_single_token_decode_shape():
+    """(B, 1, d) decode-shaped input through the fused dispatch."""
+    d, c, bits = 512, 64, 2
+    key = jax.random.PRNGKey(11)
+    p, r, s1, s2 = _quantized_layer(key, d, c, bits)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (3, 1, d))
+    try:
+        qops.set_forced_path("pallas")
+        y = qops.rht_quantized_matmul(x, p, r, s1, s2, bits=bits, d=d)
+    finally:
+        qops.set_forced_path(None)
+    assert y.shape == (3, 1, c)
+    ref = _unfused(x.reshape(3, d), p, r, s1, s2, bits=bits, d=d)
+    np.testing.assert_allclose(y.reshape(3, c), ref, rtol=1e-4,
+                               atol=1e-4 * float(jnp.abs(ref).max() + 1))

@@ -88,7 +88,10 @@ def test_error_feedback_reduces_bias():
 
 
 def _mesh(shape=(16, 16), axes=("data", "model")):
-    return AbstractMesh(shape, axes)
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:  # jax < 0.5: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def _check_specs(specs, tree, mesh):

@@ -1,6 +1,6 @@
 """Shared benchmark substrate: one trained tiny model reused by every
-quality table (the paper's protocol at container scale — see DESIGN.md §7
-scale note), plus perplexity evaluation."""
+quality table (the paper's protocol at container scale), plus perplexity
+evaluation."""
 from __future__ import annotations
 
 import functools

@@ -1,4 +1,4 @@
-"""Benchmark harness — one module per paper table/figure (DESIGN.md §7).
+"""Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows.
 

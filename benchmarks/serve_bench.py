@@ -1,7 +1,15 @@
-"""Serving throughput fp vs RaanA-quantized (container-scale proxy for the
-paper's §1 memory-bandwidth claim) + weight-bytes-resident accounting, with a
-fused-vs-unfused decode A/B: the quantized model is served once through the
-fused RHT+qmatmul dispatch and once with the legacy two-kernel composition."""
+"""Serving benchmarks (container-scale proxy for the paper's §1
+memory-bandwidth claim).
+
+Part 1 — uniform batch, fp32 vs RaanA-quantized with a fused-vs-unfused
+decode A/B (weight-bytes-resident accounting).
+
+Part 2 — mixed-length Poisson-arrival workload through the continuous-
+batching paged engine vs the lockstep baseline, each with the fused and
+unfused decode path: throughput (tok/s), per-request latency p50/p95, and
+decode-slot occupancy.  Lockstep buckets FIFO requests by prompt length and
+holds every slot until the batch's longest request finishes (the hostage
+effect the paged engine exists to remove)."""
 from __future__ import annotations
 
 import time
@@ -12,8 +20,11 @@ import numpy as np
 from repro.core import pipeline as pipe
 from repro.kernels.qmatmul import ops as qops
 from repro.launch.serve import BatchedServer
+from repro.serve import PagedServer, PoolConfig, Request
 
 from .common import Row, calib_batches, run_stats, trained_model
+
+MAX_SLOTS = 4
 
 
 def _weight_bytes(params) -> int:
@@ -21,16 +32,107 @@ def _weight_bytes(params) -> int:
                if hasattr(x, "dtype"))
 
 
+def _poisson_workload(cfg, corpus, n=10, seed=7):
+    """Mixed prompt/gen lengths, exponential inter-arrival times."""
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(0.05))
+        plen = int(rng.choice([8, 16, 32]))
+        gen = int(rng.integers(4, 17))
+        start = int(rng.integers(0, len(corpus) - plen))
+        reqs.append(Request(rid=i,
+                            prompt=np.asarray(corpus[start:start + plen],
+                                              np.int32),
+                            max_new=gen, arrival=t))
+    return reqs
+
+
+def _paged_serve(cfg, params, reqs, fused: bool):
+    pool = PoolConfig(max_slots=MAX_SLOTS, block_size=8,
+                      max_context=max(len(r.prompt) + r.max_new
+                                      for r in reqs),
+                      prefill_chunk=16)
+    engine = PagedServer(cfg, params, pool, fused=fused)
+    # warm compile caches (decode step + every prefill-chunk length the
+    # workload will produce) so the timed region measures serving, not XLA
+    chunk_lens = set()
+    for r in reqs:
+        left = len(r.prompt)
+        while left > 0:
+            c = min(pool.prefill_chunk, left)
+            chunk_lens.add(c)
+            left -= c
+    engine.run([Request(rid=-1 - i, prompt=np.zeros(c, np.int32), max_new=2)
+                for i, c in enumerate(sorted(chunk_lens))])
+    engine.stats.clear()
+    t0 = time.time()
+    results = engine.run(list(reqs))
+    wall = time.time() - t0
+    lat = [results[r.rid].t_done - r.arrival for r in reqs]
+    toks = sum(len(results[r.rid].tokens) for r in reqs)
+    return wall, toks, lat, engine.stats["mean_occupancy"]
+
+
+def _lockstep_batches(reqs):
+    """FIFO batches bucketed by prompt length (lockstep needs one shape)."""
+    batches, i = [], 0
+    while i < len(reqs):
+        plen = len(reqs[i].prompt)
+        batch = [reqs[i]]
+        i += 1
+        while (i < len(reqs) and len(batch) < MAX_SLOTS
+               and len(reqs[i].prompt) == plen):
+            batch.append(reqs[i])
+            i += 1
+        batches.append(batch)
+    return batches
+
+
+def _lockstep_serve(cfg, params, reqs, fused: bool):
+    """FIFO batches bucketed by prompt length; a batch decodes until its
+    longest request finishes, finished requests holding their slot.
+    Servers are built and warmed per shape bucket before the clock starts,
+    so the comparison measures serving, not per-bucket recompilation."""
+    with qops.fusion(fused):
+        batches = _lockstep_batches(list(reqs))
+        servers = []
+        for batch in batches:
+            plen = len(batch[0].prompt)
+            gen = max(r.max_new for r in batch)
+            server = BatchedServer(cfg, params, max_context=plen + gen)
+            server.generate(np.stack([r.prompt for r in batch]), 2)  # warmup
+            servers.append((server, gen))
+        t0 = time.time()
+        lat, toks = [], 0
+        occ_num = occ_den = 0
+        for batch, (server, gen) in zip(batches, servers):
+            start = max(r.arrival for r in batch)   # lockstep waits for all
+            now = time.time() - t0
+            if now < start:
+                time.sleep(start - now)
+            server.generate(np.stack([r.prompt for r in batch]), gen)
+            done = time.time() - t0
+            for r in batch:
+                lat.append(done - r.arrival)
+                toks += r.max_new
+            for t in range(gen):                    # slots doing useful work
+                occ_num += sum(1 for r in batch if r.max_new > t)
+                occ_den += MAX_SLOTS
+        return time.time() - t0, toks, lat, occ_num / max(occ_den, 1)
+
+
 def run(row: Row, gen: int = 16, requests: int = 4):
     cfg, params, _, corpus = trained_model()
     prompts = np.tile(np.asarray(corpus[:32], np.int32)[None], (requests, 1))
 
-    def bench(p, label):
-        server = BatchedServer(cfg, p, max_context=32 + gen)
-        out = server.generate(prompts, 2)           # warmup/compile
-        t0 = time.time()
-        out = server.generate(prompts, gen)
-        dt = time.time() - t0
+    def bench(p, label, fused=True):
+        with qops.fusion(fused):
+            server = BatchedServer(cfg, p, max_context=32 + gen)
+            out = server.generate(prompts, 2)       # warmup/compile
+            t0 = time.time()
+            out = server.generate(prompts, gen)
+            dt = time.time() - t0
         row.add(f"serve/{label}", dt / (gen * requests) * 1e6,
                 f"tok_s={gen*requests/dt:.1f};weight_bytes={_weight_bytes(p)}")
         return out
@@ -39,11 +141,15 @@ def run(row: Row, gen: int = 16, requests: int = 4):
     stats = run_stats(cfg, params, calib_batches(cfg, corpus, False))
     qp, rep = pipe.quantize_model(cfg, params, stats, 4.3,
                                   jax.random.PRNGKey(0))
-    prev = qops.fused_enabled()
-    try:
-        qops.set_fused(True)
-        bench(qp, "raana_4.3b_fused")
-        qops.set_fused(False)
-        bench(qp, "raana_4.3b_unfused")
-    finally:
-        qops.set_fused(prev)
+    bench(qp, "raana_4.3b_fused", fused=True)
+    bench(qp, "raana_4.3b_unfused", fused=False)
+
+    # --- mixed-length Poisson workload: paged vs lockstep x fused/unfused
+    reqs = _poisson_workload(cfg, corpus)
+    for mode, serve in (("paged", _paged_serve), ("lockstep", _lockstep_serve)):
+        for fused in (True, False):
+            wall, toks, lat, occ = serve(cfg, qp, reqs, fused)
+            fl = "fused" if fused else "unfused"
+            row.add(f"serve/poisson_{mode}_{fl}", wall / max(toks, 1) * 1e6,
+                    f"tok_s={toks/wall:.1f};p50_s={np.percentile(lat, 50):.2f};"
+                    f"p95_s={np.percentile(lat, 95):.2f};occupancy={occ:.2f}")

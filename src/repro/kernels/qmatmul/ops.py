@@ -10,11 +10,18 @@ Paths:
 
 Fusion: by default the practical RHT (Alg. 5) is applied *inside* the qmatmul
 kernel (``rht_quantized_matmul``) so rotated activations never round-trip
-through HBM between the Hadamard stage and the dequant GEMM.  ``set_fused``
-toggles the legacy two-kernel composition for A/B benchmarking
-(benchmarks/serve_bench.py reports both).
+through HBM between the Hadamard stage and the dequant GEMM.  The scoped
+``fusion(enabled)`` context manager selects the legacy two-kernel composition
+for A/B benchmarking (benchmarks/serve_bench.py reports both); it is backed by
+a ``contextvars.ContextVar`` so a serving engine and a benchmark running in
+the same process cannot race each other's toggles the way the old mutable
+module global could.  ``set_fused`` survives as a deprecated shim.
 """
 from __future__ import annotations
+
+import contextlib
+import contextvars
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +30,8 @@ from .qmatmul import quantized_matmul_pallas, rht_quantized_matmul_pallas
 from .ref import quantized_matmul_ref, rht_quantized_matmul_ref
 
 _FORCE_PATH: str | None = None  # "pallas" | "ref" | None (auto) — tests poke this
-_FUSE_RHT: bool = True          # fused decode path on/off (serve bench A/Bs this)
+_FUSE_RHT: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_qmatmul_fuse_rht", default=True)
 
 
 def set_forced_path(path: str | None) -> None:
@@ -32,14 +40,31 @@ def set_forced_path(path: str | None) -> None:
     _FORCE_PATH = path
 
 
+@contextlib.contextmanager
+def fusion(enabled: bool):
+    """Scoped RHT+GEMM fusion toggle (True = fused kernel, the default).
+
+    The setting only applies while tracing/executing inside the ``with``
+    block, and nests/unwinds correctly — concurrent contexts (engine vs
+    benchmark) each see their own value.
+    """
+    token = _FUSE_RHT.set(bool(enabled))
+    try:
+        yield
+    finally:
+        _FUSE_RHT.reset(token)
+
+
 def set_fused(enabled: bool) -> None:
-    """Toggle RHT+GEMM fusion for the decode path (True = fused, default)."""
-    global _FUSE_RHT
-    _FUSE_RHT = bool(enabled)
+    """Deprecated process-wide fusion toggle; use ``fusion(enabled)``."""
+    warnings.warn("qops.set_fused is deprecated; use the scoped "
+                  "qops.fusion(enabled) context manager", DeprecationWarning,
+                  stacklevel=2)
+    _FUSE_RHT.set(bool(enabled))
 
 
 def fused_enabled() -> bool:
-    return _FUSE_RHT
+    return _FUSE_RHT.get()
 
 
 def _resolve_path() -> str:
@@ -73,7 +98,7 @@ def rht_quantized_matmul(x: jax.Array, packed: jax.Array, rescale: jax.Array,
     """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if not _FUSE_RHT:
+    if not _FUSE_RHT.get():
         from repro.kernels.hadamard import ops as hops  # late: avoid cycle
         xr = hops.practical_rht(x2.astype(jnp.float32), signs1, signs2)
         return quantized_matmul(xr, packed, rescale, bits=bits, d=d

@@ -1,10 +1,14 @@
-"""Batched serving driver: prefill + decode loop over a request batch, with
-optional RaanA-quantized weights — the deployment artifact of the paper.
+"""Serving CLI: continuous-batching paged engine (default) or the lockstep
+baseline, with optional RaanA-quantized weights — the deployment artifact of
+the paper.
 
-Quantized decode routes every linear through the fused RHT+qmatmul dispatch
-(repro.kernels.qmatmul.ops): rotated activations stay in VMEM next to the
-packed-code GEMM.  ``--unfused`` restores the two-kernel composition (RHT
-round-trips through HBM) for A/B measurement.
+The paged engine (repro.serve) runs a block-arena KV pool with per-request
+block tables: requests are admitted against free blocks, prompts prefill in
+chunks interleaved with decode, and completed requests free their slot
+immediately.  ``--lockstep`` keeps the legacy ``BatchedServer`` behavior
+(aligned prefill, whole-batch decode until the last request finishes) as the
+A/B baseline.  ``--unfused`` restores the two-kernel RHT+qmatmul composition
+(rotated activations round-trip through HBM) for A/B measurement.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --tiny \
       --avg-bits 3.3 --requests 8 --gen 32
@@ -25,13 +29,16 @@ from repro.data import ByteTokenizer
 from repro.kernels.qmatmul import ops as qops
 from repro.models import decode as decmod
 from repro.models import transformer as tf
+from repro.serve import PagedServer, PoolConfig, Request
 
 
 class BatchedServer:
     """Minimal batched LM server: aligned prefill + lockstep decode.
 
-    Greedy or temperature sampling; quantized models route every linear
-    through Alg. 3 (QuantizedLinear.apply) transparently.
+    All requests prefill together and decode in lockstep until the batch's
+    last request finishes — the baseline the paged engine is measured
+    against.  Greedy or temperature sampling; quantized models route every
+    linear through Alg. 3 (QuantizedLinear.apply) transparently.
     """
 
     def __init__(self, cfg, params, max_context: int = 512):
@@ -72,10 +79,17 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--lockstep", action="store_true",
+                    help="legacy whole-batch server (A/B baseline)")
     ap.add_argument("--unfused", action="store_true",
                     help="disable RHT+qmatmul fusion (A/B baseline)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="paged engine: concurrent request slots")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged engine: tokens per KV block")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="paged engine: prompt tokens per scheduler turn")
     args = ap.parse_args()
-    qops.set_fused(not args.unfused)
 
     cfg = get_tiny(args.arch) if args.tiny else get_config(args.arch)
     key = jax.random.PRNGKey(0)
@@ -93,17 +107,33 @@ def main():
               f"{rep.avg_bits:.3f} bits in {rep.wall_time_s:.1f}s")
 
     tok = ByteTokenizer(cfg.vocab)
-    prompts = np.stack([
-        tok.encode("the quick brown fox " * 8)[: args.prompt_len]
-        for _ in range(args.requests)])
-    server = BatchedServer(cfg, params, max_context=args.prompt_len + args.gen)
+    prompt = tok.encode("the quick brown fox " * 8)[: args.prompt_len]
     t0 = time.time()
-    out = server.generate(prompts, args.gen)
+    if args.lockstep:
+        with qops.fusion(not args.unfused):
+            server = BatchedServer(cfg, params,
+                                   max_context=args.prompt_len + args.gen)
+            prompts = np.stack([prompt for _ in range(args.requests)])
+            out = server.generate(prompts, args.gen)
+        sample = out[0]
+        extra = "lockstep"
+    else:
+        pool = PoolConfig(max_slots=args.slots, block_size=args.block_size,
+                          max_context=args.prompt_len + args.gen,
+                          prefill_chunk=args.prefill_chunk)
+        engine = PagedServer(cfg, params, pool, fused=not args.unfused)
+        results = engine.run([Request(rid=i, prompt=np.asarray(prompt),
+                                      max_new=args.gen)
+                              for i in range(args.requests)])
+        sample = results[0].tokens
+        extra = (f"paged, occupancy={engine.stats['mean_occupancy']:.2f}, "
+                 f"decode_traces={engine.decode_trace_count}")
     dt = time.time() - t0
     path = "unfused" if args.unfused else "fused"
     print(f"served {args.requests} requests x {args.gen} tokens in {dt:.2f}s "
-          f"({args.requests*args.gen/dt:.1f} tok/s, {path} decode path)")
-    print("sample:", tok.decode(out[0])[:80])
+          f"({args.requests*args.gen/dt:.1f} tok/s, {path} decode path, "
+          f"{extra})")
+    print("sample:", tok.decode(np.asarray(sample))[:80])
 
 
 if __name__ == "__main__":

@@ -128,6 +128,133 @@ def cache_insert(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
     return KVCache(k=k, v=v)
 
 
+# ------------------------------------------------------------ paged caches
+#
+# The serving engine (repro/serve) stores K/V in a fixed arena of
+# (num_blocks, block_size, KV, hd) blocks shared by all requests; each request
+# owns a row of a block table mapping logical block -> physical block.
+# Logical token index for a request at absolute position p is p % ring_cap,
+# where ring_cap = allocated_blocks * block_size: full-context requests get
+# ring_cap >= total length (the ring never wraps, indices are linear), and
+# sliding-window requests get ring_cap = ceil(window / block_size) * block_size
+# so old blocks are reused in place (ring-window reuse).  Physical block 0 is
+# reserved as the null block: unallocated table entries and writes from
+# inactive slots land there and are never read as valid.
+
+
+def paged_gather_kv(arena: jax.Array, block_table: jax.Array) -> jax.Array:
+    """arena (N, bs, ...), block_table (B, MB) int32 -> (B, MB*bs, ...)."""
+    g = arena[block_table]                       # (B, MB, bs, ...)
+    b, mb, bs = g.shape[:3]
+    return g.reshape(b, mb * bs, *arena.shape[2:])
+
+
+def paged_slot_positions(pos: jax.Array, ring_cap: jax.Array,
+                         length: int) -> jax.Array:
+    """Absolute position stored in each logical slot, -1 if never written.
+
+    ``pos`` (B,): tokens inserted so far (including the current one);
+    ``ring_cap`` (B,): per-request ring capacity; ``length``: gathered slot
+    count (>= ring_cap; slots past ring_cap are unallocated padding).
+    Slot s holds the largest p <= pos-1 with p % ring_cap == s.
+    """
+    idx = jnp.arange(length, dtype=jnp.int32)[None, :]
+    last = (pos - 1)[:, None]
+    c = ring_cap[:, None]
+    stored = last - ((last - idx) % c)
+    return jnp.where((idx < c) & (stored >= 0), stored, -1)
+
+
+def paged_write_indices(pos: jax.Array, ring_cap: jax.Array,
+                        block_table: jax.Array, block_size: int,
+                        active: jax.Array | None = None):
+    """(physical block, in-block offset) for writing position ``pos``.
+
+    pos/ring_cap (B,) or scalar with block_table (B, MB) or (MB,).  Inactive
+    slots are redirected to the null block 0 so one scatter serves the whole
+    batch without conditionals (active requests always own disjoint blocks,
+    so the scatter never has conflicting updates on real blocks).
+    """
+    li = (pos % ring_cap).astype(jnp.int32)
+    off = li % block_size
+    if block_table.ndim == 1:                       # single request row
+        pb = block_table[li // block_size]
+    else:
+        b = block_table.shape[0]
+        pb = block_table[jnp.arange(b, dtype=jnp.int32), li // block_size]
+    if active is not None:
+        pb = jnp.where(active, pb, 0)
+        off = jnp.where(active, off, 0)
+    return pb, off
+
+
+def paged_decode_attention(q: jax.Array, k_arena: jax.Array,
+                           v_arena: jax.Array, block_table: jax.Array,
+                           pos: jax.Array, ring_cap: jax.Array, *,
+                           window: Optional[int] = None) -> jax.Array:
+    """One-token attention over block-table-gathered K/V.
+
+    q (B,1,H,hd); arenas (N, bs, KV, hd); block_table (B, MB); pos (B,) =
+    tokens inserted including the current one; ring_cap (B,) per-request ring
+    capacity.  Equivalent to ``decode_attention`` on a dense per-request cache
+    (window masking is exact even when ring_cap is rounded up to a block
+    multiple, because validity is computed from each slot's stored absolute
+    position rather than from raw slot age).
+    """
+    b, _, h, hd = q.shape
+    k = paged_gather_kv(k_arena, block_table)    # (B, L, KV, hd)
+    v = paged_gather_kv(v_arena, block_table)
+    length, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).astype(k.dtype)
+    qf = qf.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k,
+                   preferred_element_type=jnp.float32)        # (b,kv,g,L)
+    stored = paged_slot_positions(pos, ring_cap, length)      # (b, L)
+    valid = stored >= 0
+    if window is not None:
+        valid &= stored > (pos[:, None] - 1) - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def paged_prefill_attention(q: jax.Array, k_hist: jax.Array, v_hist: jax.Array,
+                            hist_pos: jax.Array, k_new: jax.Array,
+                            v_new: jax.Array, q_pos: jax.Array, *,
+                            window: Optional[int] = None) -> jax.Array:
+    """Chunked-prefill attention: chunk queries over gathered history + chunk.
+
+    q (B,C,H,hd); k_hist/v_hist (B,L,KV,hd) gathered from the arena with
+    stored positions ``hist_pos`` (B,L) (-1 = invalid); k_new/v_new (B,C,KV,hd)
+    are this chunk's keys at absolute positions ``q_pos`` (B,C).  Causal and
+    sliding-window masks are evaluated on true absolute positions, so the
+    result matches a full flash prefill restricted to these queries.
+    """
+    b, c, h, hd = q.shape
+    kv = k_hist.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+    k_all = jnp.concatenate([k_hist, k_new.astype(k_hist.dtype)], axis=1)
+    v_all = jnp.concatenate([v_hist, v_new.astype(v_hist.dtype)], axis=1)
+    kpos = jnp.concatenate([hist_pos, q_pos], axis=1)          # (B, L+C)
+    qf = (q.astype(jnp.float32) * scale).astype(k_all.dtype)
+    qf = qf.reshape(b, c, kv, g, hd)
+    s = jnp.einsum("bckgd,bskd->bkgcs", qf, k_all,
+                   preferred_element_type=jnp.float32)         # (b,kv,g,C,L+C)
+    mask = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= q_pos[:, :, None])
+    if window is not None:
+        mask &= (q_pos[:, :, None] - kpos[:, None, :]) < window
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgcs,bskd->bckgd", p.astype(v_all.dtype), v_all,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, c, h, hd).astype(q.dtype)
+
+
 def decode_attention(q: jax.Array, cache: KVCache, pos: jax.Array) -> jax.Array:
     """One-token attention over the cache. q (B,1,H,hd) -> (B,1,H,hd).
 

@@ -12,6 +12,12 @@ Quantized decode is memory-bound: every linear here dispatches (via
 (DESIGN.md §6), so single-token weights move HBM->VMEM packed at b/16 of the
 bf16 cost and the rotation happens in VMEM — no rotated-activation round trip
 between kernels.
+
+The ``*_paged`` variants at the bottom are the continuous-batching serving
+path (DESIGN.md §7): attention K/V lives in a shared block arena addressed
+via per-request block tables, recurrent/MLA state in per-slot arrays, and
+the decode step takes fixed-shape (tokens, pos, active, block_tables,
+ring_cap) arrays so it compiles once no matter how the batch churns.
 """
 from __future__ import annotations
 
@@ -87,6 +93,28 @@ def init_caches(cfg: ModelConfig, params: dict, b: int, context: int,
 # ----------------------------------------------------------------- prefill
 
 
+def _attn_qkv(cfg: ModelConfig, p: dict, hn: jax.Array, positions):
+    """Shared attention-mixer projection: q/k/v + qk-norm + rope/mrope.
+
+    hn (B, S, d); positions (B, S), or (3, B, S) for mrope.  Used by every
+    serving path (prefill, decode, and their paged variants) so positional
+    handling can't drift between them.
+    """
+    b, s, _ = hn.shape
+    hq, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = linear(p["wq"], hn).reshape(b, s, hq, hd)
+    k = linear(p["wk"], hn).reshape(b, s, kv, hd)
+    v = linear(p["wv"], hn).reshape(b, s, kv, hd)
+    q, k = _qk_normalize(p, q, k)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    return q, k, v
+
+
 def _ring_fill(cache: KVCache, k: jax.Array, v: jax.Array) -> KVCache:
     """Fill a ring cache from a full prefix (B, S, kv, hd): keep last cap."""
     cap = cache.k.shape[1]
@@ -109,20 +137,10 @@ def layer_prefill(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
     new_cache = dict(cache)
     if mixer == "attn":
         p = lp["attn"]
-        hq, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
-        q = linear(p["wq"], hn).reshape(b, s, hq, hd)
-        k = linear(p["wk"], hn).reshape(b, s, kv, hd)
-        v = linear(p["wv"], hn).reshape(b, s, kv, hd)
-        q, k = _qk_normalize(p, q, k)
-        if cfg.pos == "rope":
-            q = apply_rope(q, positions, cfg.rope_theta)
-            k = apply_rope(k, positions, cfg.rope_theta)
-        elif cfg.pos == "mrope":
-            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
-            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        q, k, v = _attn_qkv(cfg, p, hn, positions)
         out = attnmod.flash_attention(q, k, v, causal=True, window=cfg.window,
                                       expand_kv=cfg.expand_kv)
-        mix = linear(p["wo"], out.reshape(b, s, hq * hd))
+        mix = linear(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.hd))
         from repro.runtime.actsharding import shard_named
         new_cache["kv"] = _ring_fill(cache["kv"], shard_named(k, "kv"),
                                      shard_named(v, "kv"))
@@ -166,6 +184,58 @@ def layer_prefill(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
     return shard_hidden(h + y.astype(h.dtype)), aux, new_cache
 
 
+def _apply_layers(cfg: ModelConfig, params: dict, caches: list, h: jax.Array,
+                  layer_fn, scan: bool):
+    """Shared layer-stack driver for every serving path.
+
+    ``layer_fn(mixer, lp, h, cache) -> (h, new_cache)`` is applied to the
+    layers in execution order, scanning full periods of the mixer pattern
+    when the param/cache trees are stackable and unrolling otherwise
+    (quantized models with heterogeneous per-layer bit widths).  Returns
+    (h, new_caches) with new_caches stacked parallel to ``params['layers']``.
+    """
+    scan = scan and layers_scannable(params)
+    pat, p_period = cfg.pattern, cfg.scan_period
+    n_full = cfg.n_layers // p_period
+    rem = cfg.n_layers % p_period
+    new_caches = [None] * p_period
+
+    if scan and n_full > 0:
+        full_stacks = [jax.tree.map(lambda a: a[:n_full], st)
+                       for st in params["layers"]]
+        full_caches = [jax.tree.map(lambda a: a[:n_full], cs) for cs in caches]
+
+        def body(hh, xs):
+            lps, cs = xs
+            outs = []
+            for j in range(p_period):
+                hh, nc = layer_fn(pat[j], lps[j], hh, cs[j])
+                outs.append(nc)
+            return hh, tuple(outs)
+
+        h, scanned = jax.lax.scan(body, h, (tuple(full_stacks),
+                                            tuple(full_caches)))
+        new_caches = list(scanned)
+        for j in range(rem):
+            lp = jax.tree.map(lambda a: a[n_full], params["layers"][j])
+            cs = jax.tree.map(lambda a: a[n_full], caches[j])
+            h, nc = layer_fn(pat[j], lp, h, cs)
+            new_caches[j] = jax.tree.map(
+                lambda full, one: jnp.concatenate([full, one[None]], 0),
+                new_caches[j], nc)
+    else:
+        percall = [[] for _ in range(p_period)]
+        for i in range(cfg.n_layers):
+            jpos, idx = i % p_period, i // p_period
+            lp = get_layer(params, jpos, idx)
+            cs = jax.tree.map(lambda a: a[idx], caches[jpos])
+            h, nc = layer_fn(pat[i], lp, h, cs)
+            percall[jpos].append(nc)
+        new_caches = [jax.tree.map(lambda *xs: jnp.stack(xs, 0), *cl)
+                      for cl in percall]
+    return h, new_caches
+
+
 def prefill(cfg: ModelConfig, params: dict, tokens=None, *, embeds=None,
             positions=None, context: int | None = None, enc_embeds=None,
             cache_dtype=jnp.float32, scan: bool = True):
@@ -183,48 +253,13 @@ def prefill(cfg: ModelConfig, params: dict, tokens=None, *, embeds=None,
         positions = (jnp.broadcast_to(pos[None], (3, b, s))
                      if cfg.pos == "mrope" else pos)
     caches = init_caches(cfg, params, b, context, cache_dtype, encoder_out)
-    scan = scan and layers_scannable(params)
-    pat, p_period = cfg.pattern, cfg.scan_period
-    n_full = cfg.n_layers // p_period
-    rem = cfg.n_layers % p_period
-    new_caches = [None] * p_period
 
-    if scan and n_full > 0:
-        full_stacks = [jax.tree.map(lambda a: a[:n_full], st)
-                       for st in params["layers"]]
-        full_caches = [jax.tree.map(lambda a: a[:n_full], cs) for cs in caches]
+    def fn(mixer, lp, hh, cs):
+        hh, _, nc = layer_prefill(cfg, mixer, lp, hh, positions, cs,
+                                  encoder_out)
+        return hh, nc
 
-        def body(h, xs):
-            lps, cs = xs
-            outs = []
-            for j in range(p_period):
-                h, _, nc = layer_prefill(cfg, pat[j], lps[j], h, positions,
-                                         cs[j], encoder_out)
-                outs.append(nc)
-            return h, tuple(outs)
-
-        h, scanned = jax.lax.scan(body, h, (tuple(full_stacks),
-                                            tuple(full_caches)))
-        new_caches = list(scanned)
-        for j in range(rem):
-            lp = jax.tree.map(lambda a: a[n_full], params["layers"][j])
-            cs = jax.tree.map(lambda a: a[n_full], caches[j])
-            h, _, nc = layer_prefill(cfg, pat[j], lp, h, positions, cs,
-                                     encoder_out)
-            new_caches[j] = jax.tree.map(
-                lambda full, one: jnp.concatenate([full, one[None]], 0),
-                new_caches[j], nc)
-    else:
-        percall = [[] for _ in range(p_period)]
-        for i in range(cfg.n_layers):
-            jpos, idx = i % p_period, i // p_period
-            lp = get_layer(params, jpos, idx)
-            cs = jax.tree.map(lambda a: a[idx], caches[jpos])
-            h, _, nc = layer_prefill(cfg, pat[i], lp, h, positions, cs,
-                                     encoder_out)
-            percall[jpos].append(nc)
-        new_caches = [jax.tree.map(lambda *xs: jnp.stack(xs, 0), *cl)
-                      for cl in percall]
+    h, new_caches = _apply_layers(cfg, params, caches, h, fn, scan)
     h = apply_norm(cfg.norm, h, params["final_norm"])
     logits = linear(params["lm_head"], h)
     return logits, new_caches, jnp.int32(s)
@@ -241,23 +276,13 @@ def layer_decode(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
     new_cache = dict(cache)
     if mixer == "attn":
         p = lp["attn"]
-        hq, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
         posb = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
         if cfg.pos == "mrope":
             posb = jnp.broadcast_to(pos, (3, b, 1)).astype(jnp.int32)
-        q = linear(p["wq"], hn).reshape(b, 1, hq, hd)
-        k = linear(p["wk"], hn).reshape(b, 1, kv, hd)
-        v = linear(p["wv"], hn).reshape(b, 1, kv, hd)
-        q, k = _qk_normalize(p, q, k)
-        if cfg.pos == "rope":
-            q = apply_rope(q, posb, cfg.rope_theta)
-            k = apply_rope(k, posb, cfg.rope_theta)
-        elif cfg.pos == "mrope":
-            q = apply_mrope(q, posb, cfg.mrope_sections, cfg.rope_theta)
-            k = apply_mrope(k, posb, cfg.mrope_sections, cfg.rope_theta)
+        q, k, v = _attn_qkv(cfg, p, hn, posb)
         kvc = attnmod.cache_insert(cache["kv"], k, v, pos)
         out = attnmod.decode_attention(q, kvc, pos + 1)
-        mix = linear(p["wo"], out.reshape(b, 1, hq * hd))
+        mix = linear(p["wo"], out.reshape(b, 1, cfg.n_heads * cfg.hd))
         new_cache["kv"] = kvc
     elif mixer == "mla":
         mix, mc = mlamod.mla_decode(lp["mla"], hn, cfg.mla, cache["mla"], pos)
@@ -304,48 +329,223 @@ def decode_step(cfg: ModelConfig, params: dict, caches: list,
         d = h.shape[-1]
         table = sinusoidal_positions(caches_context(caches, cfg), d)
         h = h + jax.lax.dynamic_slice_in_dim(table, pos, 1, 0)[None].astype(h.dtype)
-    scan = scan and layers_scannable(params)
-    pat, p_period = cfg.pattern, cfg.scan_period
-    n_full = cfg.n_layers // p_period
-    rem = cfg.n_layers % p_period
-    new_caches = [None] * p_period
 
-    if scan and n_full > 0:
-        full_stacks = [jax.tree.map(lambda a: a[:n_full], st)
-                       for st in params["layers"]]
-        full_caches = [jax.tree.map(lambda a: a[:n_full], cs) for cs in caches]
+    def fn(mixer, lp, hh, cs):
+        return layer_decode(cfg, mixer, lp, hh, cs, pos)
 
-        def body(h, xs):
-            lps, cs = xs
-            outs = []
-            for j in range(p_period):
-                h, nc = layer_decode(cfg, pat[j], lps[j], h, cs[j], pos)
-                outs.append(nc)
-            return h, tuple(outs)
-
-        h, scanned = jax.lax.scan(body, h, (tuple(full_stacks),
-                                            tuple(full_caches)))
-        new_caches = list(scanned)
-        for j in range(rem):
-            lp = jax.tree.map(lambda a: a[n_full], params["layers"][j])
-            cs = jax.tree.map(lambda a: a[n_full], caches[j])
-            h, nc = layer_decode(cfg, pat[j], lp, h, cs, pos)
-            new_caches[j] = jax.tree.map(
-                lambda full, one: jnp.concatenate([full, one[None]], 0),
-                new_caches[j], nc)
-    else:
-        percall = [[] for _ in range(p_period)]
-        for i in range(cfg.n_layers):
-            jpos, idx = i % p_period, i // p_period
-            lp = get_layer(params, jpos, idx)
-            cs = jax.tree.map(lambda a: a[idx], caches[jpos])
-            h, nc = layer_decode(cfg, pat[i], lp, h, cs, pos)
-            percall[jpos].append(nc)
-        new_caches = [jax.tree.map(lambda *xs: jnp.stack(xs, 0), *cl)
-                      for cl in percall]
+    h, new_caches = _apply_layers(cfg, params, caches, h, fn, scan)
     h = apply_norm(cfg.norm, h, params["final_norm"])
     logits = linear(params["lm_head"], h)
     return logits[:, 0], new_caches
+
+
+# ------------------------------------------------- paged serving variants
+#
+# The continuous-batching engine (repro/serve) keeps one fixed set of ``S``
+# slots; attention K/V lives in a shared block arena addressed through
+# per-slot block tables, and MLA/RWKV/RG-LRU recurrent state lives in
+# per-slot arrays.  Every argument that changes as the batch composition
+# churns (tokens, positions, active mask, block tables, ring capacities) is
+# an *array* of static shape, so the jitted step traces exactly once.
+
+
+def _mask_state(old, new, active: jax.Array):
+    """Keep ``old`` state rows where ``active`` is False (slot-array pytrees)."""
+    def sel(o, n):
+        m = active.reshape(active.shape[0], *([1] * (o.ndim - 1)))
+        return jnp.where(m, n.astype(o.dtype), o)
+    return jax.tree.map(sel, old, new)
+
+
+def layer_decode_paged(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
+                       cache: dict, pos: jax.Array, active: jax.Array,
+                       block_tables: jax.Array, ring_cap: jax.Array):
+    """One layer, one token per slot, against the paged cache pool.
+
+    h (S, 1, d); pos (S,) per-slot token counts (the fed token's absolute
+    position); active (S,) request-occupancy mask; block_tables (S, MB);
+    ring_cap (S,) per-slot ring capacities in tokens.
+    """
+    b = h.shape[0]
+    hn = apply_norm(cfg.norm, h, lp["ln1"])
+    new_cache = dict(cache)
+    if mixer == "attn":
+        p = lp["attn"]
+        posb = pos[:, None].astype(jnp.int32)
+        if cfg.pos == "mrope":
+            posb = jnp.broadcast_to(pos[None, :, None], (3, b, 1)).astype(jnp.int32)
+        q, k, v = _attn_qkv(cfg, p, hn, posb)
+        block_size = cache["k"].shape[1]
+        pb, off = attnmod.paged_write_indices(pos, ring_cap, block_tables,
+                                              block_size, active)
+        k_arena = cache["k"].at[pb, off].set(k[:, 0].astype(cache["k"].dtype))
+        v_arena = cache["v"].at[pb, off].set(v[:, 0].astype(cache["v"].dtype))
+        out = attnmod.paged_decode_attention(q, k_arena, v_arena, block_tables,
+                                             pos + 1, ring_cap,
+                                             window=cfg.window)
+        mix = linear(p["wo"], out.reshape(b, 1, cfg.n_heads * cfg.hd))
+        new_cache["k"], new_cache["v"] = k_arena, v_arena
+    elif mixer == "mla":
+        mix, mc = mlamod.mla_decode_paged(lp["mla"], hn, cfg.mla,
+                                          cache["mla"], pos, active)
+        new_cache["mla"] = mc
+    elif mixer == "rwkv":
+        mix, st = rwkvmod.time_mix_decode(lp["tm"], hn[:, 0], cache["rwkv"],
+                                          n_heads=cfg.n_heads,
+                                          head_dim=cfg.hd)
+        mix = mix[:, None, :]
+        new_cache["rwkv"] = _mask_state(cache["rwkv"], st, active)
+    elif mixer == "rglru":
+        mix, st = rglrumod.rglru_decode(lp["rglru"], hn[:, 0], cache["rglru"])
+        mix = mix[:, None, :]
+        new_cache["rglru"] = _mask_state(cache["rglru"], st, active)
+    else:
+        raise ValueError(mixer)
+    h = h + mix.astype(h.dtype)
+    h2 = apply_norm(cfg.norm, h, lp["ln2"])
+    if mixer == "rwkv":
+        y = rwkvmod.channel_mix(lp["cm"], h2[:, 0],
+                                new_cache["rwkv"].x_prev_cm)[:, None, :]
+        st = new_cache["rwkv"]
+        new_cache["rwkv"] = _mask_state(
+            st, rwkvmod.RWKVState(s=st.s, x_prev_tm=st.x_prev_tm,
+                                  x_prev_cm=h2[:, 0]), active)
+    else:
+        y, _ = _ffn_apply(cfg, lp, h2, None, "dec")
+    return h + y.astype(h.dtype), new_cache
+
+
+def decode_step_paged(cfg: ModelConfig, params: dict, caches: list,
+                      tokens: jax.Array, pos: jax.Array, active: jax.Array,
+                      block_tables: jax.Array, ring_cap: jax.Array,
+                      scan: bool = True):
+    """One decode step for the whole slot set: tokens (S, 1) -> (logits
+    (S, V), new caches).  Inactive slots run inert (embeddings zeroed, cache
+    writes redirected/no-op'd) so the compiled step is reused unchanged while
+    requests come and go.
+    """
+    if cfg.enc_dec:
+        raise NotImplementedError(
+            "paged serving does not support encoder-decoder archs")
+    h = embed_tokens(cfg, params, tokens)
+    if cfg.pos == "sinusoidal":
+        d = h.shape[-1]
+        table = sinusoidal_positions(caches_context(caches, cfg), d)
+        h = h + table[jnp.minimum(pos, table.shape[0] - 1)][:, None].astype(h.dtype)
+    h = jnp.where(active[:, None, None], h, 0)
+
+    def fn(mixer, lp, hh, cs):
+        return layer_decode_paged(cfg, mixer, lp, hh, cs, pos, active,
+                                  block_tables, ring_cap)
+
+    h, new_caches = _apply_layers(cfg, params, caches, h, fn, scan)
+    h = apply_norm(cfg.norm, h, params["final_norm"])
+    logits = linear(params["lm_head"], h)
+    return logits[:, 0], new_caches
+
+
+def layer_prefill_chunk(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
+                        cache: dict, pos0: jax.Array, slot: jax.Array,
+                        bt_row: jax.Array, ring_cap: jax.Array):
+    """One layer over one request's prompt chunk h (1, C, d), reading and
+    writing the paged pool at the request's slot / block-table row.
+
+    ``pos0`` is the chunk's first absolute position; recurrent state is read
+    from the slot arrays (zeros when pos0 == 0, i.e. a freshly admitted
+    request on a recycled slot) and written back after the chunk.
+    """
+    b, c, d = h.shape
+    hn = apply_norm(cfg.norm, h, lp["ln1"])
+    new_cache = dict(cache)
+    chunk_pos = pos0 + jnp.arange(c, dtype=jnp.int32)
+
+    def slot_state(tree):
+        return jax.tree.map(
+            lambda a: jnp.where(pos0 > 0, a[slot], jnp.zeros_like(a[slot]))[None],
+            tree)
+
+    def store_state(tree, new):
+        return jax.tree.map(lambda a, n: a.at[slot].set(n[0].astype(a.dtype)),
+                            tree, new)
+
+    if mixer == "attn":
+        p = lp["attn"]
+        positions = chunk_pos[None]
+        if cfg.pos == "mrope":
+            positions = jnp.broadcast_to(chunk_pos[None, None], (3, 1, c))
+        q, k, v = _attn_qkv(cfg, p, hn, positions)
+        k_hist = attnmod.paged_gather_kv(cache["k"], bt_row[None])
+        v_hist = attnmod.paged_gather_kv(cache["v"], bt_row[None])
+        hist_pos = attnmod.paged_slot_positions(pos0[None], ring_cap[None],
+                                                k_hist.shape[1])
+        out = attnmod.paged_prefill_attention(
+            q, k_hist, v_hist, hist_pos, k, v, chunk_pos[None],
+            window=cfg.window)
+        mix = linear(p["wo"], out.reshape(b, c, cfg.n_heads * cfg.hd))
+        block_size = cache["k"].shape[1]
+        pb, off = attnmod.paged_write_indices(chunk_pos, ring_cap, bt_row,
+                                              block_size)
+        new_cache["k"] = cache["k"].at[pb, off].set(
+            k[0].astype(cache["k"].dtype))
+        new_cache["v"] = cache["v"].at[pb, off].set(
+            v[0].astype(cache["v"].dtype))
+    elif mixer == "mla":
+        mix, mc = mlamod.mla_prefill_chunk(lp["mla"], hn, cfg.mla,
+                                           cache["mla"], pos0, slot)
+        new_cache["mla"] = mc
+    elif mixer == "rwkv":
+        rwkv_st0 = slot_state(cache["rwkv"])
+        mix, s_new = rwkvmod.time_mix(lp["tm"], hn, n_heads=cfg.n_heads,
+                                      head_dim=cfg.hd, return_state=True,
+                                      state=rwkv_st0)
+        rwkv_st = rwkvmod.RWKVState(
+            s=s_new, x_prev_tm=hn[:, -1].astype(rwkv_st0.x_prev_tm.dtype),
+            x_prev_cm=rwkv_st0.x_prev_cm)
+    elif mixer == "rglru":
+        st0 = slot_state(cache["rglru"])
+        mix, st = rglrumod.rglru_block(lp["rglru"], hn, return_state=True,
+                                       state=st0)
+        new_cache["rglru"] = store_state(cache["rglru"], st)
+    else:
+        raise ValueError(mixer)
+    h = h + mix.astype(h.dtype)
+    h2 = apply_norm(cfg.norm, h, lp["ln2"])
+    if mixer == "rwkv":
+        y = rwkvmod.channel_mix(lp["cm"], h2, rwkv_st0.x_prev_cm)
+        rwkv_st = rwkvmod.RWKVState(
+            s=rwkv_st.s, x_prev_tm=rwkv_st.x_prev_tm,
+            x_prev_cm=h2[:, -1].astype(rwkv_st.x_prev_cm.dtype))
+        new_cache["rwkv"] = store_state(cache["rwkv"], rwkv_st)
+    else:
+        y, _ = _ffn_apply(cfg, lp, h2, None, "pfc")
+    return h + y.astype(h.dtype), new_cache
+
+
+def prefill_chunk_paged(cfg: ModelConfig, params: dict, caches: list,
+                        tokens: jax.Array, pos0: jax.Array, slot: jax.Array,
+                        bt_row: jax.Array, ring_cap: jax.Array,
+                        scan: bool = True):
+    """One prompt chunk for one request: tokens (1, C) starting at absolute
+    position ``pos0`` -> (last-token logits (1, V), new caches).  Interleaves
+    with decode steps in the engine loop (chunked prefill)."""
+    if cfg.enc_dec:
+        raise NotImplementedError(
+            "paged serving does not support encoder-decoder archs")
+    h = embed_tokens(cfg, params, tokens)
+    if cfg.pos == "sinusoidal":
+        d = h.shape[-1]
+        table = sinusoidal_positions(caches_context(caches, cfg), d)
+        c = tokens.shape[1]
+        h = h + jax.lax.dynamic_slice_in_dim(table, pos0, c, 0)[None].astype(h.dtype)
+
+    def fn(mixer, lp, hh, cs):
+        return layer_prefill_chunk(cfg, mixer, lp, hh, cs, pos0, slot,
+                                   bt_row, ring_cap)
+
+    h, new_caches = _apply_layers(cfg, params, caches, h, fn, scan)
+    h = apply_norm(cfg.norm, h, params["final_norm"])
+    logits = linear(params["lm_head"], h[:, -1])
+    return logits, new_caches
 
 
 def caches_context(caches: list, cfg: ModelConfig) -> int:

@@ -67,6 +67,96 @@ def mla_full(p: dict, x: jax.Array, mcfg, positions: jax.Array,
     return linear(p["wo"], out, ctx, f"{name}.wo")
 
 
+def mla_decode_paged(p: dict, x: jax.Array, mcfg, cache: MLACache,
+                     pos: jax.Array, active: jax.Array,
+                     ctx: LinearCtx | None = None, name: str = "mla"):
+    """Slot-indexed absorbed decode for the paged serving engine.
+
+    ``cache`` fields are per-slot arrays (S, cap, ...) — one row per engine
+    slot, linear (non-ring) layout.  ``pos`` (S,) is each slot's token count
+    before this step; ``active`` (S,) masks slots whose write must be a no-op
+    (their row is rewritten with its own current value) so the step can run
+    with a fixed slot count while the batch composition churns.
+    """
+    b = x.shape[0]
+    h, dn, dr, dv = mcfg.n_heads, mcfg.qk_nope, mcfg.qk_rope, mcfg.v_head
+    positions = pos[:, None].astype(jnp.int32)                  # (S, 1)
+    q_nope, q_rope = _project_q(p, x, mcfg, positions, ctx, name)
+    c_new, kr_new = _project_kv_latent(p, x, mcfg, positions, ctx, name)
+    cap = cache.c_kv.shape[1]
+    rows = jnp.arange(b, dtype=jnp.int32)
+    slot_pos = jnp.minimum(pos, cap - 1).astype(jnp.int32)
+    cd, rd = cache.c_kv.dtype, cache.k_rope.dtype
+    c_write = jnp.where(active[:, None], c_new[:, 0].astype(cd),
+                        cache.c_kv[rows, slot_pos])
+    kr_write = jnp.where(active[:, None], kr_new[:, 0].astype(rd),
+                         cache.k_rope[rows, slot_pos])
+    cache = MLACache(c_kv=cache.c_kv.at[rows, slot_pos].set(c_write),
+                     k_rope=cache.k_rope.at[rows, slot_pos].set(kr_write))
+    w_b = p["wkv_b"].reshape(mcfg.kv_lora, h, dn + dv)
+    w_uk, w_uv = w_b[..., :dn], w_b[..., dn:]
+    qc = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(cd),
+                    w_uk.astype(cd), preferred_element_type=jnp.float32)
+    s = jnp.einsum("bhl,bsl->bhs", qc.astype(cd), cache.c_kv,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(cd),
+                       cache.k_rope, preferred_element_type=jnp.float32)
+    s = s * (dn + dr) ** -0.5
+    valid = (jnp.arange(cap, dtype=jnp.int32)[None, :]
+             < jnp.minimum(pos + 1, cap)[:, None])
+    s = jnp.where(valid[:, None, :], s, attn.NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bhs,bsl->bhl", probs.astype(cd), cache.c_kv,
+                       preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhl,lhd->bhd", ctx_c.astype(cd), w_uv.astype(cd),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * dv).astype(x.dtype)
+    return linear(p["wo"], out, ctx, f"{name}.wo"), cache
+
+
+def mla_prefill_chunk(p: dict, x: jax.Array, mcfg, cache: MLACache,
+                      pos0: jax.Array, slot: jax.Array,
+                      ctx: LinearCtx | None = None, name: str = "mla"):
+    """Chunked-prefill continuation for one engine slot, absorbed form.
+
+    x (1, C, d) is the prompt chunk starting at absolute position ``pos0``;
+    the chunk's latents are appended to the slot's row (linear layout, fresh
+    positions) and the chunk attends causally over everything up to itself.
+    """
+    b, c, _ = x.shape
+    h, dn, dr, dv = mcfg.n_heads, mcfg.qk_nope, mcfg.qk_rope, mcfg.v_head
+    positions = (pos0 + jnp.arange(c, dtype=jnp.int32))[None]   # (1, C)
+    q_nope, q_rope = _project_q(p, x, mcfg, positions, ctx, name)
+    c_new, kr_new = _project_kv_latent(p, x, mcfg, positions, ctx, name)
+    cap = cache.c_kv.shape[1]
+    row_c = jax.lax.dynamic_update_slice(
+        cache.c_kv[slot], c_new[0].astype(cache.c_kv.dtype), (pos0, 0))
+    row_kr = jax.lax.dynamic_update_slice(
+        cache.k_rope[slot], kr_new[0].astype(cache.k_rope.dtype), (pos0, 0))
+    cache = MLACache(c_kv=cache.c_kv.at[slot].set(row_c),
+                     k_rope=cache.k_rope.at[slot].set(row_kr))
+    w_b = p["wkv_b"].reshape(mcfg.kv_lora, h, dn + dv)
+    w_uk, w_uv = w_b[..., :dn], w_b[..., dn:]
+    cd = cache.c_kv.dtype
+    qc = jnp.einsum("bchd,lhd->bchl", q_nope.astype(cd), w_uk.astype(cd),
+                    preferred_element_type=jnp.float32)
+    s = jnp.einsum("bchl,sl->bchs", qc.astype(cd), row_c,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bchr,sr->bchs", q_rope.astype(cd), row_kr,
+                       preferred_element_type=jnp.float32)
+    s = s * (dn + dr) ** -0.5
+    valid = (jnp.arange(cap, dtype=jnp.int32)[None, None, :]
+             <= positions[..., None])                           # (1, C, cap)
+    s = jnp.where(valid[:, :, None, :], s, attn.NEG_INF)        # (1, C, h, cap)
+    probs = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bchs,sl->bchl", probs.astype(cd), row_c,
+                       preferred_element_type=jnp.float32)
+    out = jnp.einsum("bchl,lhd->bchd", ctx_c.astype(cd), w_uv.astype(cd),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, c, h * dv).astype(x.dtype)
+    return linear(p["wo"], out, ctx, f"{name}.wo"), cache
+
+
 def mla_decode(p: dict, x: jax.Array, mcfg, cache: MLACache, pos: jax.Array,
                ctx: LinearCtx | None = None, name: str = "mla"):
     """Absorbed decode: scores/context in latent space, cache stays compressed."""

@@ -55,21 +55,36 @@ def _gates(p: dict, xc: jax.Array):
     return a, gated_in
 
 
-def _conv1d_seq(p: dict, h: jax.Array) -> jax.Array:
-    """Causal per-channel conv, width CONV_WIDTH, over (B, S, dr)."""
+def _conv1d_seq(p: dict, h: jax.Array,
+                hist: jax.Array | None = None) -> jax.Array:
+    """Causal per-channel conv, width CONV_WIDTH, over (B, S, dr).
+
+    ``hist`` (B, CONV_WIDTH-1, dr): trailing inputs from a previous chunk
+    (mid-sequence continuation); zeros when absent."""
     w = p["conv_w"].astype(h.dtype)                       # (W, dr)
+    if hist is None:
+        acc = h * w[-1]
+        for i in range(1, CONV_WIDTH):
+            acc = acc + jnp.pad(h, ((0, 0), (i, 0), (0, 0)))[:, :-i] * w[-1 - i]
+        return acc + p["conv_b"].astype(h.dtype)
+    s = h.shape[1]
+    full = jnp.concatenate([hist.astype(h.dtype), h], axis=1)  # (B, W-1+S, dr)
     acc = h * w[-1]
     for i in range(1, CONV_WIDTH):
-        acc = acc + jnp.pad(h, ((0, 0), (i, 0), (0, 0)))[:, :-i] * w[-1 - i]
+        acc = acc + full[:, CONV_WIDTH - 1 - i: CONV_WIDTH - 1 - i + s] * w[-1 - i]
     return acc + p["conv_b"].astype(h.dtype)
 
 
 def rglru_block(p: dict, x: jax.Array, ctx: LinearCtx | None = None,
-                name: str = "rglru", return_state: bool = False):
-    """Sequence mode: x (B, S, d) -> (B, S, d) [, RGLRUState]."""
+                name: str = "rglru", return_state: bool = False,
+                state: RGLRUState | None = None):
+    """Sequence mode: x (B, S, d) -> (B, S, d) [, RGLRUState].
+
+    ``state`` resumes mid-sequence (chunked prefill): the recurrence starts
+    from ``state.h`` and the causal conv sees ``state.conv`` history."""
     g = jax.nn.gelu(linear(p["wg"], x, ctx, f"{name}.wg"))
     hx = linear(p["wi"], x, ctx, f"{name}.wi")
-    xc = _conv1d_seq(p, hx)
+    xc = _conv1d_seq(p, hx, None if state is None else state.conv)
     a, b = _gates(p, xc)
 
     def combine(e1, e2):
@@ -77,11 +92,17 @@ def rglru_block(p: dict, x: jax.Array, ctx: LinearCtx | None = None,
         a2, b2 = e2
         return a1 * a2, a2 * b1 + b2
 
-    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if state is not None:
+        h = h + a_cum * state.h.astype(h.dtype)[:, None]
     out = (g.astype(jnp.float32) * h).astype(x.dtype)
     y = linear(p["wo"], out, ctx, f"{name}.wo")
     if return_state:
-        w = rglrumod_conv_tail(hx)
+        if state is None:
+            w = rglrumod_conv_tail(hx)
+        else:
+            w = jnp.concatenate([state.conv.astype(hx.dtype), hx],
+                                axis=1)[:, -(CONV_WIDTH - 1):]
         return y, RGLRUState(h=h[:, -1], conv=w)
     return y
 

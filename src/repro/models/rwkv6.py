@@ -87,14 +87,22 @@ def _out_proj(p: dict, out: jax.Array, g: jax.Array, ctx, name) -> jax.Array:
 
 def time_mix(p: dict, x: jax.Array, *, n_heads: int, head_dim: int,
              chunk: int = CHUNK, ctx: LinearCtx | None = None,
-             name: str = "tm", return_state: bool = False):
+             name: str = "tm", return_state: bool = False,
+             state: RWKVState | None = None):
     """Parallel (chunked) WKV6 over x (B, S, d) -> (B, S, d).
 
     With ``return_state`` also returns the final (B, H, dk, dv) wkv state
-    (prefill -> decode handoff)."""
+    (prefill -> decode handoff).  ``state`` resumes from a mid-sequence
+    handoff (chunked prefill): the wkv state and token-shift register are
+    seeded from it instead of zeros.
+    """
     b, s, d = x.shape
     h, dk = n_heads, head_dim
-    x_shift = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if state is None:
+        x_shift = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_shift = jnp.concatenate(
+            [state.x_prev_tm.astype(x.dtype)[:, None], x[:, :-1]], axis=1)
     xs = _ddlerp(p, x, x_shift - x)
     r, k, v, g, logw = _project_rkvg(p, xs, ctx, name)
     u = p["u"].astype(jnp.float32)                           # (h, dk)
@@ -130,7 +138,8 @@ def time_mix(p: dict, x: jax.Array, *, n_heads: int, head_dim: int,
                  + jnp.einsum("bshk,bshv->bhkv", k_carry, vc))
         return state, out
 
-    s0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+    s0 = (jnp.zeros((b, h, dk, dk), jnp.float32) if state is None
+          else state.s.astype(jnp.float32))
     s_final, outs = jax.lax.scan(chunk_step, s0, (rs, ks, vs, la, lw))
     out = jnp.moveaxis(outs, 0, 1).reshape(b, sp, h * dk)[:, :s]
     y = _out_proj(p, out, g, ctx, name)
@@ -161,10 +170,15 @@ def time_mix_decode(p: dict, x: jax.Array, state: RWKVState, *, n_heads: int,
 
 def channel_mix(p: dict, x: jax.Array, x_prev: jax.Array | None = None,
                 ctx: LinearCtx | None = None, name: str = "cm") -> jax.Array:
-    """RWKV6 channel-mix. Sequence mode (B,S,d) when x_prev is None, else one
-    step (B,d) with the explicit shift register."""
-    if x_prev is None:
-        xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    """RWKV6 channel-mix.  Sequence mode for x (B,S,d) — with ``x_prev``
+    (B,d) seeding the token-shift register for mid-sequence continuation —
+    or one step for x (B,d) with the explicit shift register."""
+    if x.ndim == 3:
+        if x_prev is None:
+            xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        else:
+            xs = jnp.concatenate([x_prev.astype(x.dtype)[:, None], x[:, :-1]],
+                                 axis=1)
     else:
         xs = x_prev
     xx = xs - x

@@ -1,0 +1,11 @@
+"""Continuous-batching serving engine with a paged KV-cache pool.
+
+``pool``   — fixed block arena + per-request block tables + slot arrays.
+``engine`` — request queue, admission control, chunked prefill interleaved
+             with decode, per-request completion.
+"""
+from .engine import PagedServer, Request
+from .pool import BlockAllocator, PoolConfig, init_pool_caches, request_blocks
+
+__all__ = ["PagedServer", "Request", "BlockAllocator", "PoolConfig",
+           "init_pool_caches", "request_blocks"]

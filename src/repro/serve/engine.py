@@ -1,0 +1,258 @@
+"""Continuous-batching LM serving engine over the paged KV-cache pool.
+
+Scheduler loop (one iteration): admit queued requests while slots and blocks
+are free, run ONE prompt chunk for the oldest mid-prefill request, then run
+ONE decode step over the whole slot set.  Chunked prefill therefore
+interleaves with decode instead of stalling it, and a request that hits EOS
+or its token budget frees its slot and blocks immediately, so queued
+requests join mid-flight — nobody waits for a batch to drain (the lockstep
+failure mode ``launch/serve.BatchedServer`` keeps around as the A/B
+baseline).
+
+The decode step is jitted ONCE per engine: batch-composition churn only
+changes the *contents* of (tokens, pos, active, block_tables, ring_cap)
+arrays, never their shapes, so quantized weights stay resident and decode
+occupancy is limited by traffic, not recompilation
+(``decode_trace_count`` is asserted == 1 in tests/test_paged_engine.py).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.qmatmul import ops as qops
+from repro.models import decode as decmod
+from repro.models.config import ModelConfig
+
+from .pool import BlockAllocator, PoolConfig, init_pool_caches, request_blocks
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``arrival`` is seconds after run start
+    (workload simulation); the engine will not admit it earlier."""
+    rid: int
+    prompt: np.ndarray               # (plen,) int32
+    max_new: int
+    eos: Optional[int] = None
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray               # generated tokens (<= max_new)
+    t_admit: float                   # seconds after run start
+    t_first: float                   # first generated token
+    t_done: float
+
+
+@dataclasses.dataclass
+class _InFlight:
+    req: Request
+    slot: int
+    blocks: list
+    bt_row: np.ndarray               # (MB,) int32 physical block ids
+    ring_cap: int                    # tokens; ring for windowed archs
+    filled: int = 0                  # prompt tokens prefilled so far
+    out: list = dataclasses.field(default_factory=list)
+    t_admit: float = 0.0
+    t_first: float = 0.0
+
+
+class PagedServer:
+    """Continuous-batching engine; greedy or temperature sampling.
+
+    ``fused`` selects the RHT+qmatmul fusion for every traced function of
+    this engine via the scoped ``qops.fusion`` context (fixed per engine —
+    the jitted step is traced under it exactly once).
+    """
+
+    def __init__(self, cfg: ModelConfig, params: dict,
+                 pool: PoolConfig | None = None, *, fused: bool = True,
+                 temperature: float = 0.0, seed: int = 0):
+        if cfg.enc_dec:
+            raise ValueError(
+                "PagedServer does not support encoder-decoder archs")
+        self.cfg = cfg
+        self.params = params
+        self.pool = pool or PoolConfig()
+        self.fused = fused
+        self.temperature = temperature
+        self.seed = seed
+        self.caches = init_pool_caches(cfg, params, self.pool)
+        self.allocator = BlockAllocator(self.pool.resolved_num_blocks(cfg))
+        self.free_slots = list(range(self.pool.max_slots - 1, -1, -1))
+        self.table_width = max(
+            request_blocks(cfg, self.pool, self.pool.max_context), 1)
+        self.has_attn = "attn" in cfg.pattern
+        self.decode_trace_count = 0
+        self.stats: dict = {}
+        self._pending: collections.deque[Request] = collections.deque()
+        self._prefilling: collections.deque[_InFlight] = collections.deque()
+        self._active: dict[int, _InFlight] = {}
+
+        # Caches are donated: the pool buffers alias input->output instead of
+        # being copied every step (same pattern as launch/dryrun.py).  jit's
+        # own shape cache handles the few distinct prefill chunk lengths.
+        def _step(params_, caches, tokens, pos, active, bts, ring):
+            self.decode_trace_count += 1      # trace-time side effect only
+            return decmod.decode_step_paged(cfg, params_, caches, tokens,
+                                            pos, active, bts, ring)
+
+        def _chunk(params_, caches, toks, pos0, slot, bt, ring):
+            return decmod.prefill_chunk_paged(cfg, params_, caches, toks,
+                                              pos0, slot, bt, ring)
+
+        self._step = jax.jit(_step, donate_argnums=(1,))
+        self._chunk = jax.jit(_chunk, donate_argnums=(1,))
+
+    # ------------------------------------------------------------- plumbing
+
+    def _sample(self, logits: np.ndarray, rid: int, step: int) -> int:
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits))
+        rng = np.random.default_rng((self.seed, rid, step))
+        g = rng.gumbel(size=logits.shape)
+        return int(np.argmax(logits / self.temperature + g))
+
+    # ------------------------------------------------------------ lifecycle
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) < 1 or req.max_new < 1:
+            raise ValueError(
+                f"request {req.rid}: needs a non-empty prompt and "
+                f"max_new >= 1 (got {len(req.prompt)}, {req.max_new})")
+        total = len(req.prompt) + req.max_new
+        if total > self.pool.max_context:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new = {total} exceeds "
+                f"max_context = {self.pool.max_context}")
+        need = request_blocks(self.cfg, self.pool, total)
+        if need > self.allocator.num_blocks - 1:
+            raise ValueError(
+                f"request {req.rid}: needs {need} blocks, pool has "
+                f"{self.allocator.num_blocks - 1}")
+        self._pending.append(req)
+
+    def _try_admit(self, now: float) -> None:
+        # FIFO with head-of-line blocking: admission control is purely
+        # "do I have a slot and enough blocks for this request's capacity".
+        while self._pending and self._pending[0].arrival <= now:
+            req = self._pending[0]
+            if not self.free_slots:
+                return
+            total = len(req.prompt) + req.max_new
+            need = request_blocks(self.cfg, self.pool, total)
+            blocks = self.allocator.alloc(need)
+            if blocks is None:
+                return
+            self._pending.popleft()
+            slot = self.free_slots.pop()
+            bt_row = np.zeros(self.table_width, np.int32)
+            bt_row[:need] = blocks
+            ring_cap = len(blocks) * self.pool.block_size if blocks else 1
+            self._prefilling.append(_InFlight(
+                req=req, slot=slot, blocks=blocks, bt_row=bt_row,
+                ring_cap=ring_cap, t_admit=now))
+
+    def _finish(self, st: _InFlight, now: float,
+                results: dict[int, RequestResult]) -> None:
+        self.allocator.free(st.blocks)
+        self.free_slots.append(st.slot)
+        del self._active[st.slot]
+        results[st.req.rid] = RequestResult(
+            rid=st.req.rid, tokens=np.asarray(st.out, np.int32),
+            t_admit=st.t_admit, t_first=st.t_first, t_done=now)
+
+    def _prefill_one(self, t0: float,
+                     results: dict[int, RequestResult]) -> None:
+        st = self._prefilling[0]
+        plen = len(st.req.prompt)
+        c = min(self.pool.prefill_chunk, plen - st.filled)
+        if self.has_attn:
+            c = min(c, st.ring_cap)   # scatter uniqueness within a chunk
+        toks = jnp.asarray(st.req.prompt[st.filled:st.filled + c],
+                           jnp.int32)[None]
+        with qops.fusion(self.fused):
+            logits, self.caches = self._chunk(
+                self.params, self.caches, toks, jnp.int32(st.filled),
+                jnp.int32(st.slot), jnp.asarray(st.bt_row),
+                jnp.int32(st.ring_cap))
+        st.filled += c
+        self.stats["prefill_chunks"] = self.stats.get("prefill_chunks", 0) + 1
+        if st.filled == plen:
+            self._prefilling.popleft()
+            tok = self._sample(np.asarray(logits[0]), st.req.rid, 0)
+            now = time.monotonic() - t0       # after the step has completed
+            st.out.append(tok)
+            st.t_first = now
+            if len(st.out) >= st.req.max_new or tok == st.req.eos:
+                self._active[st.slot] = st   # _finish expects it registered
+                self._finish(st, now, results)
+            else:
+                self._active[st.slot] = st
+
+    def _decode_once(self, t0: float,
+                     results: dict[int, RequestResult]) -> None:
+        s = self.pool.max_slots
+        tokens = np.zeros((s, 1), np.int32)
+        pos = np.zeros(s, np.int32)
+        active = np.zeros(s, bool)
+        bts = np.zeros((s, self.table_width), np.int32)
+        ring = np.ones(s, np.int32)
+        for slot, st in self._active.items():
+            tokens[slot, 0] = st.out[-1]
+            pos[slot] = len(st.req.prompt) + len(st.out) - 1
+            active[slot] = True
+            bts[slot] = st.bt_row
+            ring[slot] = st.ring_cap
+        with qops.fusion(self.fused):
+            logits, self.caches = self._step(
+                self.params, self.caches, jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(active), jnp.asarray(bts),
+                jnp.asarray(ring))
+        logits = np.asarray(logits)
+        now = time.monotonic() - t0           # after the step has completed
+        self.stats["decode_steps"] = self.stats.get("decode_steps", 0) + 1
+        self.stats.setdefault("occupancy", []).append(
+            len(self._active) / self.pool.max_slots)
+        for slot in list(self._active):
+            st = self._active[slot]
+            tok = self._sample(logits[slot], st.req.rid, len(st.out))
+            st.out.append(tok)
+            if len(st.out) >= st.req.max_new or tok == st.req.eos:
+                self._finish(st, now, results)
+
+    # ------------------------------------------------------------------ run
+
+    def run(self, requests: list[Request] | None = None
+            ) -> dict[int, RequestResult]:
+        """Serve until every submitted request completes.  Returns
+        rid -> RequestResult; aggregate stats land in ``self.stats``."""
+        for r in requests or []:
+            self.submit(r)
+        self._pending = collections.deque(
+            sorted(self._pending, key=lambda r: r.arrival))
+        results: dict[int, RequestResult] = {}
+        t0 = time.monotonic()
+        while self._pending or self._prefilling or self._active:
+            self._try_admit(time.monotonic() - t0)
+            if self._prefilling:
+                self._prefill_one(t0, results)
+            if self._active:
+                self._decode_once(t0, results)
+            elif not self._prefilling:
+                if self._pending:
+                    wait = self._pending[0].arrival - (time.monotonic() - t0)
+                    if wait > 0:
+                        time.sleep(min(wait, 0.05))
+        occ = self.stats.get("occupancy", [])
+        self.stats["mean_occupancy"] = float(np.mean(occ)) if occ else 0.0
+        return results

@@ -1,0 +1,106 @@
+"""Paged KV-cache pool: a fixed arena of (num_blocks, block_size, KV, hd)
+blocks shared by all in-flight requests, plus per-slot state arrays for the
+cache types that are O(1) or latent-compressed per token.
+
+Layout (mirrors ``params["layers"]`` / ``decode.init_caches`` so the paged
+decode step scans layers and pool state together):
+
+  attn   -> {"k": (n_j, N, bs, KV, hd), "v": ...}   one arena per layer; a
+            physical block id addresses the same (bs, KV, hd) slab in every
+            layer's arena, so one block table serves the whole stack
+  mla    -> {"mla": MLACache((n_j, S, cap, kv_lora), ...)}  per-slot rows
+  rwkv   -> {"rwkv": RWKVState((n_j, S, H, dk, dk), ...)}   per-slot rows
+  rglru  -> {"rglru": RGLRUState((n_j, S, dr), ...)}        per-slot rows
+
+Physical block 0 is the null block: unallocated block-table entries point at
+it and inactive-slot writes are redirected to it; validity masks derived from
+per-slot positions guarantee it is never read as a real key.  Sliding-window
+archs allocate only ceil(window / block_size) blocks per request and reuse
+them as a ring (ring-window reuse), so a long generation holds a bounded
+number of blocks no matter how many tokens it emits.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode as decmod
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Sizing of the paged pool; all shapes derived here are static, so the
+    jitted decode step compiles once per (model, PoolConfig)."""
+    max_slots: int = 8          # concurrent in-flight requests
+    block_size: int = 16        # tokens per KV block
+    max_context: int = 512      # per-request cap (prompt + generation)
+    num_blocks: int | None = None   # arena size; default fits every slot at
+    #   max_context simultaneously (i.e. admission never blocks on blocks)
+    prefill_chunk: int = 32     # prompt tokens per engine iteration
+
+    def resolved_num_blocks(self, cfg: ModelConfig) -> int:
+        if self.num_blocks is not None:
+            return self.num_blocks
+        per = request_blocks(cfg, self, self.max_context)
+        return 1 + self.max_slots * max(per, 1)   # +1: null block
+
+
+def request_blocks(cfg: ModelConfig, pool: PoolConfig, total_len: int) -> int:
+    """Blocks a request of ``total_len`` tokens needs (0 for attention-free
+    archs).  Sliding-window archs are capped at the window: their blocks are
+    ring-reused in place."""
+    if "attn" not in cfg.pattern:
+        return 0
+    cap = decmod.attn_capacity(cfg, total_len)
+    return -(-cap // pool.block_size)
+
+
+class BlockAllocator:
+    """Host-side free list over physical blocks; block 0 is reserved."""
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks >= 2, "need at least the null block + one real block"
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> 1, 2, ...
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """n physical block ids, or None if the pool can't satisfy it now."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, blocks: list[int]) -> None:
+        self._free.extend(blocks)
+
+
+def init_pool_caches(cfg: ModelConfig, params: dict, pool: PoolConfig,
+                     dtype=jnp.float32) -> list:
+    """Device-side pool state, stacked parallel to ``params['layers']``."""
+    if cfg.enc_dec:
+        raise ValueError("paged pool does not support encoder-decoder archs")
+    num_blocks = pool.resolved_num_blocks(cfg)
+    pat, p = cfg.pattern, cfg.scan_period
+    caches = []
+    for j in range(p):
+        stack = params["layers"][j]
+        n_j = (len(stack) if isinstance(stack, list)
+               else jax.tree.leaves(stack)[0].shape[0])
+
+        def one(mixer):
+            if mixer == "attn":
+                shape = (num_blocks, pool.block_size, cfg.n_kv, cfg.hd)
+                return {"k": jnp.zeros(shape, dtype),
+                        "v": jnp.zeros(shape, dtype)}
+            return decmod.init_layer_cache(cfg, mixer, pool.max_slots,
+                                           pool.max_context, dtype)
+
+        caches.append(jax.tree.map(lambda *xs: jnp.stack(xs, 0),
+                                   *[one(pat[j]) for _ in range(n_j)]))
+    return caches

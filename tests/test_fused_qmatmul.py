@@ -73,11 +73,10 @@ def test_dispatch_paths_agree():
         y_ref = qops.rht_quantized_matmul(x, p, r, s1, s2, bits=bits, d=d)
         qops.set_forced_path("pallas")
         y_pal = qops.rht_quantized_matmul(x, p, r, s1, s2, bits=bits, d=d)
-        qops.set_fused(False)
-        y_unf = qops.rht_quantized_matmul(x, p, r, s1, s2, bits=bits, d=d)
+        with qops.fusion(False):
+            y_unf = qops.rht_quantized_matmul(x, p, r, s1, s2, bits=bits, d=d)
     finally:
         qops.set_forced_path(None)
-        qops.set_fused(True)
     assert y_ref.shape == (2, 3, c)
     np.testing.assert_allclose(y_ref, y_pal, rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(y_ref, y_unf, rtol=1e-4, atol=1e-4)
@@ -140,13 +139,29 @@ def test_qlinear_apply_with_tricks_across_paths(path):
     try:
         qops.set_forced_path(path)
         y_fused = q.apply(x)
-        qops.set_fused(False)
-        y_unfused = q.apply(x)
+        with qops.fusion(False):
+            y_unfused = q.apply(x)
     finally:
         qops.set_forced_path(None)
-        qops.set_fused(True)
     np.testing.assert_allclose(y_fused, y_unfused, rtol=1e-4,
                                atol=1e-4 * float(jnp.abs(y_unfused).max() + 1))
+
+
+def test_fusion_context_scoped_and_shim_deprecated():
+    """fusion() nests/unwinds; set_fused still works but warns."""
+    assert qops.fused_enabled()
+    with qops.fusion(False):
+        assert not qops.fused_enabled()
+        with qops.fusion(True):
+            assert qops.fused_enabled()
+        assert not qops.fused_enabled()
+    assert qops.fused_enabled()
+    with pytest.warns(DeprecationWarning):
+        qops.set_fused(False)
+    assert not qops.fused_enabled()
+    with pytest.warns(DeprecationWarning):
+        qops.set_fused(True)
+    assert qops.fused_enabled()
 
 
 def test_single_token_decode_shape():

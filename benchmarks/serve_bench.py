@@ -9,9 +9,15 @@ batching paged engine vs the lockstep baseline, each with the fused and
 unfused decode path: throughput (tok/s), per-request latency p50/p95, and
 decode-slot occupancy.  Lockstep buckets FIFO requests by prompt length and
 holds every slot until the batch's longest request finishes (the hostage
-effect the paged engine exists to remove)."""
+effect the paged engine exists to remove).
+
+Part 3 — shared-system-prompt workload with the prefix cache on vs a cold
+pool: greedy outputs must be token-identical, and the prefill-token
+reduction equals the cache's measured hit tokens.  Everything lands in
+``BENCH_serve.json`` so the serving perf trajectory is tracked across PRs."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -48,11 +54,27 @@ def _poisson_workload(cfg, corpus, n=10, seed=7):
     return reqs
 
 
-def _paged_serve(cfg, params, reqs, fused: bool):
+def _shared_prefix_workload(cfg, corpus, n=8, sys_len=48, tail=8, seed=11):
+    """Every request opens with the same system prompt + a distinct tail —
+    the workload prefix caching exists for."""
+    rng = np.random.default_rng(seed)
+    sys_p = np.asarray(corpus[:sys_len], np.int32)
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(0.03))
+        start = int(rng.integers(sys_len, len(corpus) - tail))
+        prompt = np.concatenate(
+            [sys_p, np.asarray(corpus[start:start + tail], np.int32)])
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new=int(rng.integers(4, 13)), arrival=t))
+    return reqs
+
+
+def _paged_serve(cfg, params, reqs, fused: bool, prefix_cache: bool = False):
     pool = PoolConfig(max_slots=MAX_SLOTS, block_size=8,
                       max_context=max(len(r.prompt) + r.max_new
                                       for r in reqs),
-                      prefill_chunk=16)
+                      prefill_chunk=16, prefix_cache=prefix_cache)
     engine = PagedServer(cfg, params, pool, fused=fused)
     # warm compile caches (decode step + every prefill-chunk length the
     # workload will produce) so the timed region measures serving, not XLA
@@ -71,7 +93,7 @@ def _paged_serve(cfg, params, reqs, fused: bool):
     wall = time.time() - t0
     lat = [results[r.rid].t_done - r.arrival for r in reqs]
     toks = sum(len(results[r.rid].tokens) for r in reqs)
-    return wall, toks, lat, engine.stats["mean_occupancy"]
+    return wall, toks, lat, engine.stats, results
 
 
 def _lockstep_batches(reqs):
@@ -145,11 +167,58 @@ def run(row: Row, gen: int = 16, requests: int = 4):
     bench(qp, "raana_4.3b_unfused", fused=False)
 
     # --- mixed-length Poisson workload: paged vs lockstep x fused/unfused
+    bench_json: dict = {"workloads": {}}
     reqs = _poisson_workload(cfg, corpus)
-    for mode, serve in (("paged", _paged_serve), ("lockstep", _lockstep_serve)):
+    for mode in ("paged", "lockstep"):
         for fused in (True, False):
-            wall, toks, lat, occ = serve(cfg, qp, reqs, fused)
+            if mode == "paged":
+                wall, toks, lat, stats, _ = _paged_serve(cfg, qp, reqs, fused)
+                occ = stats["mean_occupancy"]
+            else:
+                wall, toks, lat, occ = _lockstep_serve(cfg, qp, reqs, fused)
             fl = "fused" if fused else "unfused"
             row.add(f"serve/poisson_{mode}_{fl}", wall / max(toks, 1) * 1e6,
                     f"tok_s={toks/wall:.1f};p50_s={np.percentile(lat, 50):.2f};"
                     f"p95_s={np.percentile(lat, 95):.2f};occupancy={occ:.2f}")
+            bench_json["workloads"][f"poisson_{mode}_{fl}"] = {
+                "tok_s": toks / wall,
+                "p50_s": float(np.percentile(lat, 50)),
+                "p95_s": float(np.percentile(lat, 95)),
+                "occupancy": float(occ)}
+
+    # --- shared-system-prompt workload: prefix cache on vs cold pool
+    preqs = _shared_prefix_workload(cfg, corpus)
+    cold = _paged_serve(cfg, qp, preqs, True, prefix_cache=False)
+    warm = _paged_serve(cfg, qp, preqs, True, prefix_cache=True)
+    mismatch = sum(
+        not np.array_equal(warm[4][r.rid].tokens, cold[4][r.rid].tokens)
+        for r in preqs)
+    wstats = warm[3]
+    saved = wstats.get("prefill_tokens_saved", 0)
+    hit_rate = wstats.get("prefix_hit_rate", 0.0)
+    for label, (wall, toks, lat, stats, _) in (("cold", cold), ("warm", warm)):
+        row.add(f"serve/shared_prefix_{label}", wall / max(toks, 1) * 1e6,
+                f"tok_s={toks/wall:.1f};p50_s={np.percentile(lat, 50):.2f};"
+                f"p95_s={np.percentile(lat, 95):.2f};"
+                f"prefill_tokens={stats.get('prefill_tokens', 0)};"
+                f"hit_rate={stats.get('prefix_hit_rate', 0.0):.2f}")
+    tok_s_cold = cold[1] / cold[0]
+    tok_s_warm = warm[1] / warm[0]
+    row.add("serve/shared_prefix_summary", 0.0,
+            f"hit_rate={hit_rate:.2f};prefill_tokens_saved={saved};"
+            f"token_mismatches={mismatch};"
+            f"speedup={tok_s_warm / max(tok_s_cold, 1e-9):.2f}x")
+    bench_json["workloads"]["shared_prefix"] = {
+        "tok_s_warm": warm[1] / warm[0],
+        "tok_s_cold": cold[1] / cold[0],
+        "p50_s_warm": float(np.percentile(warm[2], 50)),
+        "p95_s_warm": float(np.percentile(warm[2], 95)),
+        "occupancy": float(wstats["mean_occupancy"]),
+        "prefix_hit_rate": float(hit_rate),
+        "prefill_tokens_saved": int(saved),
+        "prefill_tokens_cold": int(cold[3].get("prefill_tokens", 0)),
+        "prefill_tokens_warm": int(wstats.get("prefill_tokens", 0)),
+        "token_mismatches_vs_cold": int(mismatch)}
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(bench_json, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -6,6 +6,15 @@ solved exactly by dynamic programming over the budget axis after dividing all
 m_k and R by g = gcd(m_1..m_L, R) — the paper's divide-by-GCD trick, which is
 what makes the DP table small enough (R/g ~ 1e5) to solve in seconds on host.
 
+When the slot count still exceeds ``_MAX_SLOTS`` the budget unit is coarsened
+and g no longer divides the m_k, so the per-(layer, bits) slot costs are
+rounded.  Round-to-nearest (Alg. 4's floor(m b / g + 1/2)) can *under*-count
+real bits, so the reconstructed allocation is verified against the true
+budget and, if it overruns, the DP is re-solved with ceiling costs — which
+over-count and therefore guarantee sum b_k m_k <= g * n_slots <= R.  The
+all-minimum-bits assignment is feasible by the entry precondition, so the
+repair always terminates with a true-budget-feasible result.
+
 Everything here is host-side numpy: allocation happens once per model, before
 quantization, and its output (a python list of ints) is static metadata.
 """
@@ -34,12 +43,11 @@ class AllocationResult:
     objective: float         # sum alpha_k 2^{-b_k}
     gcd: int                 # the g actually used by the DP
     n_slots: int             # R // g
+    total_params: int = 0    # sum m_k (0 only if the caller omitted it)
 
     @property
     def avg_bits(self) -> float:
-        return self.total_bits / max(1, self._total_params)
-
-    _total_params: int = 0
+        return self.total_bits / max(1, self.total_params)
 
 
 def _gcd_many(vals: Sequence[int]) -> int:
@@ -57,9 +65,50 @@ def allocate_for_avg_bits(alphas: Sequence[float], m: Sequence[int],
     return allocate_bits(alphas, m, r, bit_choices)
 
 
+def _dp_solve(err: np.ndarray, costs: np.ndarray, bits: list[int],
+              n_slots: int):
+    """DP over the slot axis.  Returns (picked bits per layer, objective) or
+    None when no assignment fits in ``n_slots`` slots under ``costs``."""
+    num_layers = costs.shape[0]
+    inf = np.inf
+    f = np.full(n_slots + 1, inf)
+    f[0] = 0.0
+    choice = np.zeros((num_layers, n_slots + 1), dtype=np.int8)
+
+    for k in range(num_layers):
+        newf = np.full(n_slots + 1, inf)
+        ch = np.zeros(n_slots + 1, dtype=np.int8)
+        for j in range(len(bits)):
+            ckj = int(costs[k, j])
+            if ckj > n_slots:
+                continue
+            cand = np.full(n_slots + 1, inf)
+            cand[ckj:] = f[: n_slots + 1 - ckj] + err[k, j]
+            better = cand < newf
+            newf = np.where(better, cand, newf)
+            ch = np.where(better, np.int8(j), ch)
+        f = newf
+        choice[k] = ch
+
+    if not np.isfinite(f).any():
+        return None
+    r = int(np.argmin(f))
+    objective = float(f[r])
+    picked = []
+    for k in range(num_layers - 1, -1, -1):
+        j = int(choice[k, r])
+        picked.append(bits[j])
+        r -= int(costs[k, j])
+    picked.reverse()
+    return picked, objective
+
+
 def allocate_bits(alphas: Sequence[float], m: Sequence[int], budget: int,
                   bit_choices: Sequence[int]) -> AllocationResult:
-    """Exact DP solve of the bit-allocation integer program (Alg. 4)."""
+    """Exact DP solve of the bit-allocation integer program (Alg. 4).
+
+    The returned allocation always satisfies ``total_bits <= budget``, even
+    on the coarsened-g path where the DP's slot costs are rounded."""
     alphas = np.asarray(alphas, dtype=np.float64)
     m = np.asarray(m, dtype=np.int64)
     bits = sorted(int(b) for b in set(bit_choices))
@@ -80,47 +129,35 @@ def allocate_bits(alphas: Sequence[float], m: Sequence[int], budget: int,
         g *= factor
         n_slots = budget // g
 
-    costs = np.empty((num_layers, len(bits)), dtype=np.int64)  # slots per (k, b)
-    for j, b in enumerate(bits):
-        # round-to-nearest slot count, as in Alg. 4:  floor(m_k b / g + 1/2)
-        costs[:, j] = (m * b + g // 2) // g
-
-    inf = np.inf
-    f = np.full(n_slots + 1, inf)
-    f[0] = 0.0
-    choice = np.zeros((num_layers, n_slots + 1), dtype=np.int8)
     err = (alphas[:, None] * np.exp2(-np.asarray(bits, dtype=np.float64))[None, :])
+    bcol = np.asarray(bits, dtype=np.int64)[None, :]
+    # round-to-nearest slot count, as in Alg. 4:  floor(m_k b / g + 1/2)
+    costs = (m[:, None] * bcol + g // 2) // g
 
-    for k in range(num_layers):
-        newf = np.full(n_slots + 1, inf)
-        ch = np.zeros(n_slots + 1, dtype=np.int8)
-        for j in range(len(bits)):
-            ckj = int(costs[k, j])
-            if ckj > n_slots:
-                continue
-            cand = np.full(n_slots + 1, inf)
-            cand[ckj:] = f[: n_slots + 1 - ckj] + err[k, j]
-            better = cand < newf
-            newf = np.where(better, cand, newf)
-            ch = np.where(better, np.int8(j), ch)
-        f = newf
-        choice[k] = ch
+    solved = _dp_solve(err, costs, bits, n_slots)
+    picked, objective = solved if solved is not None else (None, None)
 
-    if not np.isfinite(f).any():
-        raise ValueError("infeasible allocation (budget too tight after rounding)")
-    r = int(np.argmin(f))
-    objective = float(f[r])
-    picked = []
-    for k in range(num_layers - 1, -1, -1):
-        j = int(choice[k, r])
-        picked.append(bits[j])
-        r -= int(costs[k, j])
-    picked.reverse()
-    total_bits = int(np.sum(np.asarray(picked, dtype=np.int64) * m))
-    res = AllocationResult(bits=picked, total_bits=total_bits, budget=budget,
-                           objective=objective, gcd=g, n_slots=n_slots)
-    object.__setattr__(res, "_total_params", int(m.sum()))
-    return res
+    def total(bs):
+        return int(np.sum(np.asarray(bs, dtype=np.int64) * m))
+
+    if picked is None or total(picked) > budget:
+        # Nearest-rounding under-counted (only possible when g does not
+        # divide the m_k, i.e. the coarsened path): re-solve with ceiling
+        # costs, which over-count and so can never exceed the true budget.
+        costs = -((-m[:, None] * bcol) // g)
+        solved = _dp_solve(err, costs, bits, n_slots)
+        if solved is not None:
+            picked, objective = solved
+        else:
+            # Ceiling costs over-shrank the feasible set; the all-minimum
+            # assignment fits the true budget by the precondition above.
+            picked = [bits[0]] * num_layers
+            objective = float(np.sum(err[:, 0]))
+    total_bits = total(picked)
+    assert total_bits <= budget, "allocation repair failed to fit budget"
+    return AllocationResult(bits=picked, total_bits=total_bits, budget=budget,
+                            objective=objective, gcd=g, n_slots=n_slots,
+                            total_params=int(m.sum()))
 
 
 def brute_force_allocate(alphas, m, budget, bit_choices) -> AllocationResult:
@@ -137,9 +174,7 @@ def brute_force_allocate(alphas, m, budget, bit_choices) -> AllocationResult:
             best, best_obj = combo, obj
     if best is None:
         raise ValueError("infeasible")
-    res = AllocationResult(bits=list(best),
-                           total_bits=sum(b * mk for b, mk in zip(best, m)),
-                           budget=budget, objective=best_obj, gcd=1,
-                           n_slots=budget)
-    object.__setattr__(res, "_total_params", int(sum(m)))
-    return res
+    return AllocationResult(bits=list(best),
+                            total_bits=sum(b * mk for b, mk in zip(best, m)),
+                            budget=budget, objective=best_obj, gcd=1,
+                            n_slots=budget, total_params=int(sum(m)))

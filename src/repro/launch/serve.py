@@ -5,10 +5,14 @@ the paper.
 The paged engine (repro.serve) runs a block-arena KV pool with per-request
 block tables: requests are admitted against free blocks, prompts prefill in
 chunks interleaved with decode, and completed requests free their slot
-immediately.  ``--lockstep`` keeps the legacy ``BatchedServer`` behavior
-(aligned prefill, whole-batch decode until the last request finishes) as the
-A/B baseline.  ``--unfused`` restores the two-kernel RHT+qmatmul composition
-(rotated activations round-trip through HBM) for A/B measurement.
+immediately.  Shared prompt prefixes are served from the content-addressed
+prefix cache (``--no-prefix-cache`` for a cold pool A/B; the printed
+``prefix_hit_rate`` is the fraction of prompt tokens whose prefill was
+skipped), and ``--kv-dtype bf16`` halves the KV arena bytes.  ``--lockstep``
+keeps the legacy ``BatchedServer`` behavior (aligned prefill, whole-batch
+decode until the last request finishes) as the A/B baseline.  ``--unfused``
+restores the two-kernel RHT+qmatmul composition (rotated activations
+round-trip through HBM) for A/B measurement.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --tiny \
       --avg-bits 3.3 --requests 8 --gen 32
@@ -89,6 +93,12 @@ def main():
                     help="paged engine: tokens per KV block")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="paged engine: prompt tokens per scheduler turn")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="content-addressed KV prefix reuse (paged engine; "
+                         "auto-bypassed for windowed/recurrent archs)")
+    ap.add_argument("--kv-dtype", choices=["f32", "bf16"], default="f32",
+                    help="paged engine: KV arena + slot-state dtype")
     args = ap.parse_args()
 
     cfg = get_tiny(args.arch) if args.tiny else get_config(args.arch)
@@ -120,7 +130,10 @@ def main():
     else:
         pool = PoolConfig(max_slots=args.slots, block_size=args.block_size,
                           max_context=args.prompt_len + args.gen,
-                          prefill_chunk=args.prefill_chunk)
+                          prefill_chunk=args.prefill_chunk,
+                          prefix_cache=args.prefix_cache,
+                          kv_dtype=(jnp.bfloat16 if args.kv_dtype == "bf16"
+                                    else jnp.float32))
         engine = PagedServer(cfg, params, pool, fused=not args.unfused)
         results = engine.run([Request(rid=i, prompt=np.asarray(prompt),
                                       max_new=args.gen)
@@ -128,6 +141,11 @@ def main():
         sample = results[0].tokens
         extra = (f"paged, occupancy={engine.stats['mean_occupancy']:.2f}, "
                  f"decode_traces={engine.decode_trace_count}")
+        if engine.prefix_cache is not None:
+            extra += (f", prefix_hit_rate="
+                      f"{engine.stats['prefix_hit_rate']:.2f}, "
+                      f"prefill_tokens_saved="
+                      f"{engine.stats.get('prefill_tokens_saved', 0)}")
     dt = time.time() - t0
     path = "unfused" if args.unfused else "fused"
     print(f"served {args.requests} requests x {args.gen} tokens in {dt:.2f}s "

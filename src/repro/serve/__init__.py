@@ -1,11 +1,13 @@
 """Continuous-batching serving engine with a paged KV-cache pool.
 
-``pool``   — fixed block arena + per-request block tables + slot arrays.
-``engine`` — request queue, admission control, chunked prefill interleaved
-             with decode, per-request completion.
+``pool``   — fixed block arena + per-request block tables + slot arrays;
+             refcounted block ownership + content-addressed prefix cache.
+``engine`` — request queue, admission control (with prefix reuse / COW),
+             chunked prefill interleaved with decode, per-request completion.
 """
 from .engine import PagedServer, Request
-from .pool import BlockAllocator, PoolConfig, init_pool_caches, request_blocks
+from .pool import (BlockAllocator, PoolConfig, PrefixCache, init_pool_caches,
+                   request_blocks)
 
 __all__ = ["PagedServer", "Request", "BlockAllocator", "PoolConfig",
-           "init_pool_caches", "request_blocks"]
+           "PrefixCache", "init_pool_caches", "request_blocks"]

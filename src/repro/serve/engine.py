@@ -14,6 +14,15 @@ changes the *contents* of (tokens, pos, active, block_tables, ring_cap)
 arrays, never their shapes, so quantized weights stay resident and decode
 occupancy is limited by traffic, not recompilation
 (``decode_trace_count`` is asserted == 1 in tests/test_paged_engine.py).
+
+Admission consults the content-addressed prefix cache (DESIGN.md §8): the
+longest cached prefix of the prompt is served straight from the pool
+(refcounts bumped, chunked prefill starts at the first uncached token, a
+mid-block match is cloned copy-on-write), and completed requests *release*
+their blocks — fully-written blocks stay cached on an LRU that is evicted
+only under allocation pressure.  Pure-attention, non-windowed archs only;
+ring-window blocks mutate in place and recurrent/MLA state is per-slot, so
+those configs bypass the cache entirely.
 """
 from __future__ import annotations
 
@@ -30,7 +39,8 @@ from repro.kernels.qmatmul import ops as qops
 from repro.models import decode as decmod
 from repro.models.config import ModelConfig
 
-from .pool import BlockAllocator, PoolConfig, init_pool_caches, request_blocks
+from .pool import (BlockAllocator, PoolConfig, PrefixCache, init_pool_caches,
+                   request_blocks)
 
 
 @dataclasses.dataclass
@@ -64,6 +74,8 @@ class _InFlight:
     out: list = dataclasses.field(default_factory=list)
     t_admit: float = 0.0
     t_first: float = 0.0
+    chain: object = None             # prefix-cache hash of last full block
+    n_hashed: int = 0                # full blocks matched/registered so far
 
 
 class PagedServer:
@@ -87,7 +99,16 @@ class PagedServer:
         self.temperature = temperature
         self.seed = seed
         self.caches = init_pool_caches(cfg, params, self.pool)
-        self.allocator = BlockAllocator(self.pool.resolved_num_blocks(cfg))
+        # Prefix caching needs blocks that are immutable once written:
+        # pure-attention archs without a sliding window.  Windowed archs
+        # ring-reuse their blocks in place, and recurrent/MLA state lives in
+        # per-slot arrays the cache can't name — both bypass.
+        self.cacheable = (self.pool.prefix_cache and cfg.window is None
+                          and all(mx == "attn" for mx in cfg.pattern))
+        self.prefix_cache = (PrefixCache(self.pool.block_size)
+                             if self.cacheable else None)
+        self.allocator = BlockAllocator(self.pool.resolved_num_blocks(cfg),
+                                        cache=self.prefix_cache)
         self.free_slots = list(range(self.pool.max_slots - 1, -1, -1))
         self.table_width = max(
             request_blocks(cfg, self.pool, self.pool.max_context), 1)
@@ -110,8 +131,13 @@ class PagedServer:
             return decmod.prefill_chunk_paged(cfg, params_, caches, toks,
                                               pos0, slot, bt, ring)
 
+        def _cow(caches, src, dst):
+            # clone one physical block's KV across every layer arena
+            return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), caches)
+
         self._step = jax.jit(_step, donate_argnums=(1,))
         self._chunk = jax.jit(_chunk, donate_argnums=(1,))
+        self._cow = jax.jit(_cow, donate_argnums=(0,))
 
     # ------------------------------------------------------------- plumbing
 
@@ -150,21 +176,76 @@ class PagedServer:
                 return
             total = len(req.prompt) + req.max_new
             need = request_blocks(self.cfg, self.pool, total)
-            blocks = self.allocator.alloc(need)
-            if blocks is None:
+            # Longest cached prefix: whole-block hits are shared (refcount
+            # bumped before alloc so allocation pressure can't evict them);
+            # a mid-block match is cloned copy-on-write into the request's
+            # first private block.  Capped at plen - 1: at least one prompt
+            # token is always recomputed to produce first-token logits.
+            hits: list[int] = []
+            parent, cached, cow_src = None, 0, None
+            if self.prefix_cache is not None:
+                hits, parent, cached, cow_src = self.prefix_cache.match(
+                    req.prompt, len(req.prompt) - 1)
+                for b in hits:
+                    self.allocator.incref(b)
+                if cow_src is not None:
+                    self.allocator.incref(cow_src)
+            fresh = self.allocator.alloc(need - len(hits))
+            if fresh is None:
+                if cow_src is not None:
+                    self.allocator.decref(cow_src)
+                for b in reversed(hits):      # leaf-first, like _finish
+                    self.allocator.decref(b)
                 return
+            if cow_src is not None:
+                # fresh[0] sits at logical index len(hits) — exactly where
+                # the partially-matching block's contents belong
+                self.caches = self._cow(self.caches, jnp.int32(cow_src),
+                                        jnp.int32(fresh[0]))
+                self.allocator.decref(cow_src)
+                self.stats["prefix_cow"] = self.stats.get("prefix_cow", 0) + 1
+            blocks = hits + fresh
             self._pending.popleft()
             slot = self.free_slots.pop()
             bt_row = np.zeros(self.table_width, np.int32)
             bt_row[:need] = blocks
             ring_cap = len(blocks) * self.pool.block_size if blocks else 1
+            if self.prefix_cache is not None:
+                self.stats["prompt_tokens"] = (
+                    self.stats.get("prompt_tokens", 0) + len(req.prompt))
+                self.stats["prefill_tokens_saved"] = (
+                    self.stats.get("prefill_tokens_saved", 0) + cached)
+                if cached:
+                    self.stats["prefix_hits"] = (
+                        self.stats.get("prefix_hits", 0) + 1)
             self._prefilling.append(_InFlight(
                 req=req, slot=slot, blocks=blocks, bt_row=bt_row,
-                ring_cap=ring_cap, t_admit=now))
+                ring_cap=ring_cap, filled=cached, t_admit=now,
+                chain=parent, n_hashed=len(hits)))
+
+    def _register_blocks(self, st: _InFlight, seq, upto: int) -> None:
+        """Register st's fully-written blocks covering positions < upto
+        (KV for those positions is in the arena) into the prefix cache."""
+        bs = self.pool.block_size
+        while (st.n_hashed + 1) * bs <= upto:
+            k = st.n_hashed
+            st.chain = self.prefix_cache.register(
+                st.chain, seq[k * bs:(k + 1) * bs], int(st.bt_row[k]))
+            st.n_hashed += 1
 
     def _finish(self, st: _InFlight, now: float,
                 results: dict[int, RequestResult]) -> None:
-        self.allocator.free(st.blocks)
+        if self.prefix_cache is not None:
+            # decode wrote KV through position plen + len(out) - 2 (the last
+            # sampled token was never fed back), so generated tokens extend
+            # the cached chain too — multi-turn prompts hit their history
+            seq = np.concatenate([st.req.prompt,
+                                  np.asarray(st.out[:-1], np.int32)])
+            self._register_blocks(st, seq, len(seq))
+        # children (later blocks) enter the idle LRU first, so eviction
+        # under pressure reclaims leaves before the prefixes they chain off
+        for b in reversed(st.blocks):
+            self.allocator.decref(b)
         self.free_slots.append(st.slot)
         del self._active[st.slot]
         results[st.req.rid] = RequestResult(
@@ -187,6 +268,11 @@ class PagedServer:
                 jnp.int32(st.ring_cap))
         st.filled += c
         self.stats["prefill_chunks"] = self.stats.get("prefill_chunks", 0) + 1
+        self.stats["prefill_tokens"] = self.stats.get("prefill_tokens", 0) + c
+        if self.prefix_cache is not None:
+            # blocks completed by this chunk are fully written: publish them
+            # so concurrent requests sharing the prompt hit them immediately
+            self._register_blocks(st, st.req.prompt, st.filled)
         if st.filled == plen:
             self._prefilling.popleft()
             tok = self._sample(np.asarray(logits[0]), st.req.rid, 0)
@@ -255,4 +341,10 @@ class PagedServer:
                         time.sleep(min(wait, 0.05))
         occ = self.stats.get("occupancy", [])
         self.stats["mean_occupancy"] = float(np.mean(occ)) if occ else 0.0
+        if self.prefix_cache is not None:
+            pt = self.stats.get("prompt_tokens", 0)
+            self.stats["prefix_hit_rate"] = (
+                self.stats.get("prefill_tokens_saved", 0) / pt if pt else 0.0)
+            self.stats["prefix_evictions"] = self.prefix_cache.evictions
+            self.stats["prefix_cached_blocks"] = len(self.prefix_cache)
         return results

@@ -55,3 +55,38 @@ def test_coarsening_safeguard():
     res = allocate.allocate_bits([1.0, 2.0, 3.0], m, 4 * sum(m), [2, 4, 8])
     assert res.total_bits <= 4 * sum(m)
     assert res.n_slots <= allocate._MAX_SLOTS
+
+
+@settings(deadline=None, max_examples=40)
+@given(n=st.integers(2, 5), seed=st.integers(0, 2**31 - 1),
+       avg=st.floats(1.5, 6.0))
+def test_coarsened_dp_never_exceeds_budget(n, seed, avg):
+    """Adversarial (coprime-ish) layer sizes under a tiny slot cap: the
+    round-to-nearest slot costs under-count real bits, so without the
+    verify/repair pass allocate_bits returned total_bits > budget (e.g.
+    seed 18 overran a 36118-bit budget by 329 bits)."""
+    old = allocate._MAX_SLOTS
+    allocate._MAX_SLOTS = 50               # force the coarsened path
+    try:
+        rng = np.random.default_rng(seed)
+        m = [int(x) for x in rng.integers(3, 4001, n)]
+        alphas = rng.uniform(0.1, 20.0, n)
+        budget = int(avg * sum(m))
+        bits = [1, 2, 3, 4, 6, 8]
+        if budget < bits[0] * sum(m):
+            budget = bits[0] * sum(m)
+        dp = allocate.allocate_bits(alphas, m, budget, bits)
+        bf = allocate.brute_force_allocate(alphas, m, budget, bits)
+        assert dp.total_bits <= budget     # the hard feasibility contract
+        # the DP can be suboptimal under coarsened costs, never super-optimal
+        assert dp.objective >= bf.objective - 1e-9 * max(1, bf.objective)
+    finally:
+        allocate._MAX_SLOTS = old
+
+
+def test_avg_bits_on_directly_constructed_result():
+    res = allocate.AllocationResult(bits=[4, 4], total_bits=4096, budget=5000,
+                                    objective=0.0, gcd=1, n_slots=5000,
+                                    total_params=1024)
+    assert res.avg_bits == 4.0
+    assert allocate.allocate_bits([1.0], [128], 512, [2, 4]).total_params == 128

@@ -1,0 +1,200 @@
+"""Prefix-cache correctness: content-addressed KV block reuse must be
+invisible to outputs (token-identical greedy generations with caching on vs
+a cold pool) across cache families, while refcounts/LRU eviction keep the
+pool sound under allocation pressure and copy-on-write handles mid-block
+divergence.  The jitted decode step must still trace exactly once whether
+admissions hit or miss the cache."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as tf
+from repro.serve import PagedServer, PoolConfig, Request
+from repro.serve.pool import BlockAllocator, PrefixCache
+
+POOL = PoolConfig(max_slots=2, block_size=4, max_context=32, prefill_chunk=4)
+COLD = dataclasses.replace(POOL, prefix_cache=False)
+
+
+def _nodrop(cfg):
+    if cfg.moe is not None:
+        return cfg.with_(moe=dataclasses.replace(cfg.moe,
+                                                 capacity_factor=64.0))
+    return cfg
+
+
+def _model(arch):
+    cfg = _nodrop(registry.get_tiny(arch))
+    return cfg, tf.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _shared_prefix_requests(cfg, n=4, sys_len=12, tail=4, gen=6, seed=3):
+    """n requests sharing a system prompt, each with a distinct tail."""
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(0, cfg.vocab, sys_len).astype(np.int32)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_p,
+                         rng.integers(0, cfg.vocab, tail).astype(np.int32)]),
+                    max_new=gen)
+            for i in range(n)]
+
+
+# one arch per relevant cache family: full attention (caches), sliding
+# window (ring blocks mutate in place -> bypass), MLA (per-slot latent
+# state -> bypass); caching on must be output-invisible for all three
+@pytest.mark.parametrize("arch", ["llama2-7b", "mixtral-8x7b",
+                                  "deepseek-v2-236b"])
+def test_greedy_identical_cache_on_vs_off(arch):
+    cfg, params = _model(arch)
+    reqs = _shared_prefix_requests(cfg)
+    warm = PagedServer(cfg, params, POOL)
+    got = warm.run([dataclasses.replace(r) for r in reqs])
+    cold = PagedServer(cfg, params, COLD)
+    ref = cold.run([dataclasses.replace(r) for r in reqs])
+    for r in reqs:
+        np.testing.assert_array_equal(
+            got[r.rid].tokens, ref[r.rid].tokens,
+            err_msg=f"{arch}: rid={r.rid}")
+    if arch == "llama2-7b":
+        assert warm.cacheable and warm.prefix_cache is not None
+        assert warm.stats["prefill_tokens_saved"] > 0
+        assert warm.stats["prefix_hit_rate"] > 0
+        # prefill-token reduction must equal the tokens the cache served
+        assert (warm.stats["prefill_tokens"]
+                + warm.stats["prefill_tokens_saved"]
+                == warm.stats["prompt_tokens"])
+    else:
+        # ring-window / MLA archs must bypass (blocks mutate or state is
+        # per-slot), not serve stale KV
+        assert warm.prefix_cache is None
+
+
+def test_refcounts_drain_and_survive_sharing():
+    """Blocks shared by concurrent requests are released exactly once per
+    owner: after the run every block is free-or-cached-idle again."""
+    cfg, params = _model("llama2-7b")
+    engine = PagedServer(cfg, params, POOL)
+    engine.run(_shared_prefix_requests(cfg))
+    a = engine.allocator
+    assert a.free_blocks == a.num_blocks - 1
+    assert not a._ref                           # no leaked references
+    assert a.cached_idle_blocks == len(engine.prefix_cache)
+
+
+def test_eviction_under_pressure_before_admission_fails():
+    """A pool whose blocks are all parked in the prefix cache must shrink
+    the cache (LRU first) to admit a new request rather than deadlock."""
+    cfg, params = _model("llama2-7b")
+    rng = np.random.default_rng(9)
+    # arena fits exactly one request; request 1's cached blocks occupy it
+    pool = dataclasses.replace(POOL, max_slots=1, num_blocks=9)
+    engine = PagedServer(cfg, params, pool)
+    engine.run([Request(rid=0, prompt=rng.integers(0, cfg.vocab, 16)
+                        .astype(np.int32), max_new=4)])
+    assert engine.allocator.cached_idle_blocks > 0
+    p1 = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    got = engine.run([Request(rid=1, prompt=p1, max_new=4)])
+    assert engine.prefix_cache.evictions > 0
+    cold = PagedServer(cfg, params,
+                       dataclasses.replace(pool, prefix_cache=False))
+    ref = cold.run([Request(rid=1, prompt=p1, max_new=4)])
+    np.testing.assert_array_equal(got[1].tokens, ref[1].tokens)
+
+
+def test_cow_divergence_mid_block():
+    """A prompt that diverges mid-block from a cached sequence reuses the
+    matching token prefix via a private copy-on-write clone, and the cached
+    original stays intact for later exact hits."""
+    cfg, params = _model("llama2-7b")
+    rng = np.random.default_rng(5)
+    base = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    div = base.copy()
+    div[14:] = (div[14:] + 1) % cfg.vocab       # diverges inside block 3
+    engine = PagedServer(cfg, params, POOL)
+    r_base = engine.run([Request(rid=0, prompt=base, max_new=6)])
+    saved0 = engine.stats["prefill_tokens_saved"]
+    r_div = engine.run([Request(rid=1, prompt=div, max_new=6)])
+    assert engine.stats.get("prefix_cow", 0) >= 1
+    # 3 full blocks + 2 tokens of block 3 matched
+    assert engine.stats["prefill_tokens_saved"] - saved0 == 14
+    cold = PagedServer(cfg, params, COLD)
+    ref = cold.run([Request(rid=1, prompt=div, max_new=6)])
+    np.testing.assert_array_equal(r_div[1].tokens, ref[1].tokens)
+    # the original sequence still hits its own (unclobbered) chain in full
+    r_again = engine.run([Request(rid=2, prompt=base, max_new=6)])
+    np.testing.assert_array_equal(r_again[2].tokens, r_base[0].tokens)
+
+
+def test_decode_trace_count_one_under_hits_and_misses():
+    cfg, params = _model("llama2-7b")
+    engine = PagedServer(cfg, params, POOL)
+    engine.run(_shared_prefix_requests(cfg))                  # misses + hits
+    engine.run(_shared_prefix_requests(cfg, seed=4))          # fresh misses
+    engine.run(_shared_prefix_requests(cfg))                  # near-full hits
+    assert engine.stats["prefill_tokens_saved"] > 0
+    assert engine.decode_trace_count == 1, (
+        f"paged decode step retraced {engine.decode_trace_count} times")
+
+
+# ------------------------------------------------------- host-side units
+
+
+def test_prefix_cache_match_and_partial():
+    c = PrefixCache(block_size=4)
+    toks = list(range(1, 13))                   # blocks [1..4] [5..8] [9..12]
+    h0 = c.register(c.ROOT, toks[0:4], 3)
+    h1 = c.register(h0, toks[4:8], 7)
+    # full-prefix lookup, capped below the second block boundary
+    hits, parent, cached, cow = c.match(np.asarray(toks), 7)
+    assert hits == [3] and parent == h0 and cached == 7 and cow == 7
+    # exact full-block chain
+    hits, parent, cached, cow = c.match(np.asarray(toks), 8)
+    assert hits == [3, 7] and parent == h1 and cached == 8 and cow is None
+    # divergence inside block 1 -> partial match against block 7's tokens
+    div = toks[:6] + [99, 98, 97, 96]
+    hits, _, cached, cow = c.match(np.asarray(div), 9)
+    assert hits == [3] and cached == 6 and cow == 7
+    # first content wins: re-registering the same chain keeps block 3
+    assert c.register(c.ROOT, toks[0:4], 11) == h0
+    assert c.match(np.asarray(toks), 4)[0] == [3]
+
+
+def test_match_rejects_hash_collisions():
+    """A chain_hash collision must not serve another sequence's KV: the
+    stored token tuple is compared, not just the 64-bit hash."""
+    c = PrefixCache(block_size=4)
+    c.chain_hash = lambda parent, tokens: 0     # adversarial: everything collides
+    c.register(c.ROOT, [1, 2, 3, 4], 5)
+    hits, parent, cached, cow = c.match(np.asarray([9, 9, 9, 9, 9]), 4)
+    assert hits == [] and cached == 0 and cow is None
+    # the genuine sequence still matches through the colliding hash
+    assert c.match(np.asarray([1, 2, 3, 4, 9]), 4)[0] == [5]
+
+
+def test_refcounted_allocator_lru_eviction_order():
+    cache = PrefixCache(block_size=4)
+    a = BlockAllocator(6, cache=cache)
+    got = a.alloc(5)                            # whole arena (1..5)
+    assert a.alloc(1) is None
+    h = cache.ROOT
+    for i, b in enumerate(got):
+        h = cache.register(h, [i] * 4, b)
+    for b in got:                               # park all five in the LRU
+        a.decref(b)
+    assert a.free_blocks == 5 and a.cached_idle_blocks == 5
+    # a prefix hit revives a block from the LRU instead of evicting it
+    a.incref(got[0])
+    assert a.cached_idle_blocks == 4
+    # allocation pressure evicts in LRU (insertion) order: got[1] first
+    fresh = a.alloc(1)
+    assert fresh == [got[1]]
+    assert cache.evictions == 1
+    assert not cache.contains_block(got[1])
+    # releasing a no-longer-cached block returns it to the free list
+    a.decref(fresh[0])
+    a.decref(got[0])
+    assert a.free_blocks == 5

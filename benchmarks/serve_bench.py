@@ -13,8 +13,14 @@ effect the paged engine exists to remove).
 
 Part 3 — shared-system-prompt workload with the prefix cache on vs a cold
 pool: greedy outputs must be token-identical, and the prefill-token
-reduction equals the cache's measured hit tokens.  Everything lands in
-``BENCH_serve.json`` so the serving perf trajectory is tracked across PRs."""
+reduction equals the cache's measured hit tokens.
+
+Part 4 — self-speculative decoding (DESIGN.md §9): the same weights
+dual-quantized (shared calibration + rotation) into a target and a low-bit
+draft, served spec-on vs spec-off on a generation-heavy workload; outputs
+must stay token-identical (greedy) and the leg records acceptance rate and
+the tok/s speedup.  Everything lands in ``BENCH_serve.json`` so the serving
+perf trajectory is tracked across PRs."""
 from __future__ import annotations
 
 import json
@@ -70,12 +76,27 @@ def _shared_prefix_workload(cfg, corpus, n=8, sys_len=48, tail=8, seed=11):
     return reqs
 
 
-def _paged_serve(cfg, params, reqs, fused: bool, prefix_cache: bool = False):
+def _spec_workload(cfg, corpus, n=4, plen=12, gen=24, seed=13):
+    """Generation-heavy (decode-bound) — where speculation pays."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        start = int(rng.integers(0, len(corpus) - plen))
+        reqs.append(Request(rid=i,
+                            prompt=np.asarray(corpus[start:start + plen],
+                                              np.int32),
+                            max_new=gen))
+    return reqs
+
+
+def _paged_serve(cfg, params, reqs, fused: bool, prefix_cache: bool = False,
+                 draft_params=None, speculate: int = 0):
     pool = PoolConfig(max_slots=MAX_SLOTS, block_size=8,
                       max_context=max(len(r.prompt) + r.max_new
                                       for r in reqs),
                       prefill_chunk=16, prefix_cache=prefix_cache)
-    engine = PagedServer(cfg, params, pool, fused=fused)
+    engine = PagedServer(cfg, params, pool, fused=fused,
+                         draft_params=draft_params, speculate=speculate)
     # warm compile caches (decode step + every prefill-chunk length the
     # workload will produce) so the timed region measures serving, not XLA
     chunk_lens = set()
@@ -160,9 +181,12 @@ def run(row: Row, gen: int = 16, requests: int = 4):
         return out
 
     bench(params, "fp32")
-    stats = run_stats(cfg, params, calib_batches(cfg, corpus, False))
-    qp, rep = pipe.quantize_model(cfg, params, stats, 4.3,
-                                  jax.random.PRNGKey(0))
+    cal_stats = run_stats(cfg, params, calib_batches(cfg, corpus, False))
+    # one calibration pass, two budgets: the 4.3-bit target serves every
+    # workload below, the 2.2-bit draft only the speculative leg (its sign
+    # leaves alias the served target's — rotation stored once)
+    qp, rep, dqp, drep = pipe.quantize_model_dual(
+        cfg, params, cal_stats, 4.3, 2.2, jax.random.PRNGKey(0))
     bench(qp, "raana_4.3b_fused", fused=True)
     bench(qp, "raana_4.3b_unfused", fused=False)
 
@@ -172,8 +196,9 @@ def run(row: Row, gen: int = 16, requests: int = 4):
     for mode in ("paged", "lockstep"):
         for fused in (True, False):
             if mode == "paged":
-                wall, toks, lat, stats, _ = _paged_serve(cfg, qp, reqs, fused)
-                occ = stats["mean_occupancy"]
+                wall, toks, lat, estats, _ = _paged_serve(cfg, qp, reqs,
+                                                          fused)
+                occ = estats["mean_occupancy"]
             else:
                 wall, toks, lat, occ = _lockstep_serve(cfg, qp, reqs, fused)
             fl = "fused" if fused else "unfused"
@@ -196,18 +221,44 @@ def run(row: Row, gen: int = 16, requests: int = 4):
     wstats = warm[3]
     saved = wstats.get("prefill_tokens_saved", 0)
     hit_rate = wstats.get("prefix_hit_rate", 0.0)
-    for label, (wall, toks, lat, stats, _) in (("cold", cold), ("warm", warm)):
+    for label, (wall, toks, lat, estats, _) in (("cold", cold),
+                                                ("warm", warm)):
         row.add(f"serve/shared_prefix_{label}", wall / max(toks, 1) * 1e6,
                 f"tok_s={toks/wall:.1f};p50_s={np.percentile(lat, 50):.2f};"
                 f"p95_s={np.percentile(lat, 95):.2f};"
-                f"prefill_tokens={stats.get('prefill_tokens', 0)};"
-                f"hit_rate={stats.get('prefix_hit_rate', 0.0):.2f}")
+                f"prefill_tokens={estats.get('prefill_tokens', 0)};"
+                f"hit_rate={estats.get('prefix_hit_rate', 0.0):.2f}")
     tok_s_cold = cold[1] / cold[0]
     tok_s_warm = warm[1] / warm[0]
     row.add("serve/shared_prefix_summary", 0.0,
             f"hit_rate={hit_rate:.2f};prefill_tokens_saved={saved};"
             f"token_mismatches={mismatch};"
             f"speedup={tok_s_warm / max(tok_s_cold, 1e-9):.2f}x")
+    # --- self-speculative decoding: dual-quantized draft, spec on vs off
+    sreqs = _spec_workload(cfg, corpus)
+    base = _paged_serve(cfg, qp, sreqs, True)
+    spec = _paged_serve(cfg, qp, sreqs, True, draft_params=dqp, speculate=3)
+    spec_mismatch = sum(
+        not np.array_equal(spec[4][r.rid].tokens, base[4][r.rid].tokens)
+        for r in sreqs)
+    sstats = spec[3]
+    tok_s_base, tok_s_spec = base[1] / base[0], spec[1] / spec[0]
+    row.add("serve/speculative", spec[0] / max(spec[1], 1) * 1e6,
+            f"tok_s={tok_s_spec:.1f};baseline_tok_s={tok_s_base:.1f};"
+            f"speedup={tok_s_spec / max(tok_s_base, 1e-9):.2f}x;"
+            f"acceptance_rate={sstats.get('acceptance_rate', 0.0):.2f};"
+            f"draft_bits={drep.avg_bits:.2f};"
+            f"token_mismatches={spec_mismatch}")
+    bench_json["workloads"]["speculative"] = {
+        "tok_s_spec": tok_s_spec,
+        "tok_s_baseline": tok_s_base,
+        "speedup": tok_s_spec / max(tok_s_base, 1e-9),
+        "acceptance_rate": float(sstats.get("acceptance_rate", 0.0)),
+        "spec_rounds": int(sstats.get("spec_rounds", 0)),
+        "speculate_k": 3,
+        "draft_avg_bits": float(drep.avg_bits),
+        "token_mismatches_vs_baseline": int(spec_mismatch)}
+
     bench_json["workloads"]["shared_prefix"] = {
         "tok_s_warm": warm[1] / warm[0],
         "tok_s_cold": cold[1] / cold[0],

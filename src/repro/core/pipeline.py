@@ -19,6 +19,7 @@ in full precision.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Any
@@ -189,6 +190,48 @@ def quantize_model(cfg: ModelConfig, params: dict,
         wall_time_s=time.time() - t0,
         n_layers=len(entries))
     return qparams, report
+
+
+# ------------------------------------------------ dual (self-speculative)
+
+
+def _alias_rotation(tq, dq):
+    """Point every draft QuantizedLinear/Grouped's sign vectors at the
+    target's buffers.  Both trees were quantized with the same PRNG key, so
+    the values are already identical — aliasing just stores the rotation
+    once (and makes the sharing checkable by identity in tests)."""
+    def share(t, d):
+        if isinstance(d, (QuantizedLinear, QuantizedGrouped)):
+            return dataclasses.replace(d, signs1=t.signs1, signs2=t.signs2)
+        return d
+    is_q = lambda x: isinstance(x, (QuantizedLinear, QuantizedGrouped))
+    return jax.tree.map(share, tq, dq, is_leaf=is_q)
+
+
+def quantize_model_dual(cfg: ModelConfig, params: dict,
+                        stats: dict[str, LayerStat], avg_bits: float,
+                        draft_avg_bits: float, key: jax.Array, **kwargs):
+    """Self-speculative pair: quantize the SAME weights twice from one
+    calibration pass — a target-budget model plus an aggressively low-budget
+    draft (e.g. ~4 vs ~2.2 avg bits).
+
+    AllocateBits makes bit-width a free per-layer parameter, so the draft
+    costs no extra calibration, no separate checkpoint, and no extra
+    rotation state: both runs consume the same ``stats`` and the same PRNG
+    ``key``, so every layer's Rademacher signs (the practical-RHT rotation)
+    come out identical, and the draft's sign leaves are aliased to the
+    target's.  Full-precision leaves (embeddings, norms, routers, lm_head)
+    are shared by reference between the two trees, so the draft's marginal
+    memory is just its packed codes + side info.  Returns
+    ``(target_params, target_report, draft_params, draft_report)``; feed the
+    pair to ``serve.PagedServer(..., draft_params=..., speculate=k)``.
+    """
+    tparams, treport = quantize_model(cfg, params, stats, avg_bits, key,
+                                      **kwargs)
+    dparams, dreport = quantize_model(cfg, params, stats, draft_avg_bits, key,
+                                      **kwargs)
+    dparams = _alias_rotation(tparams, dparams)
+    return tparams, treport, dparams, dreport
 
 
 # ------------------------------------------------- uniform / dry-run variant

@@ -14,14 +14,13 @@ through HBM between the Hadamard stage and the dequant GEMM.  The scoped
 ``fusion(enabled)`` context manager selects the legacy two-kernel composition
 for A/B benchmarking (benchmarks/serve_bench.py reports both); it is backed by
 a ``contextvars.ContextVar`` so a serving engine and a benchmark running in
-the same process cannot race each other's toggles the way the old mutable
-module global could.  ``set_fused`` survives as a deprecated shim.
+the same process cannot race each other's toggles the way a mutable module
+global could.
 """
 from __future__ import annotations
 
 import contextlib
 import contextvars
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -42,11 +41,15 @@ def set_forced_path(path: str | None) -> None:
 
 @contextlib.contextmanager
 def fusion(enabled: bool):
-    """Scoped RHT+GEMM fusion toggle (True = fused kernel, the default).
+    """Scoped RHT+GEMM fusion toggle (True = fused single-dispatch kernel,
+    the default; False = legacy two-kernel composition where rotated
+    activations round-trip through HBM, kept for A/B measurement).
 
     The setting only applies while tracing/executing inside the ``with``
     block, and nests/unwinds correctly — concurrent contexts (engine vs
-    benchmark) each see their own value.
+    benchmark) each see their own value, so two engines in one process can
+    hold opposite settings without racing.  This is the only supported
+    toggle; the old process-wide ``set_fused`` mutator has been removed.
     """
     token = _FUSE_RHT.set(bool(enabled))
     try:
@@ -55,15 +58,9 @@ def fusion(enabled: bool):
         _FUSE_RHT.reset(token)
 
 
-def set_fused(enabled: bool) -> None:
-    """Deprecated process-wide fusion toggle; use ``fusion(enabled)``."""
-    warnings.warn("qops.set_fused is deprecated; use the scoped "
-                  "qops.fusion(enabled) context manager", DeprecationWarning,
-                  stacklevel=2)
-    _FUSE_RHT.set(bool(enabled))
-
-
 def fused_enabled() -> bool:
+    """Current fusion setting (the innermost enclosing ``fusion`` scope, or
+    the fused default when none is active)."""
     return _FUSE_RHT.get()
 
 

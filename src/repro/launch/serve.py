@@ -12,10 +12,18 @@ skipped), and ``--kv-dtype bf16`` halves the KV arena bytes.  ``--lockstep``
 keeps the legacy ``BatchedServer`` behavior (aligned prefill, whole-batch
 decode until the last request finishes) as the A/B baseline.  ``--unfused``
 restores the two-kernel RHT+qmatmul composition (rotated activations
-round-trip through HBM) for A/B measurement.
+round-trip through HBM) for A/B measurement.  ``--speculate K`` turns on
+self-speculative decoding: the same weights are quantized a second time at
+``--draft-bits`` (sharing the calibration pass and Hadamard rotation with
+the target quantization) and the engine runs draft-propose/target-verify
+rounds — greedy outputs stay token-identical, and the printed
+``acceptance_rate`` tracks how many draft tokens survive verification.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --tiny \
       --avg-bits 3.3 --requests 8 --gen 32
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --tiny \
+      --avg-bits 4.0 --speculate 3 --draft-bits 2.2 --requests 4 --gen 16
 """
 from __future__ import annotations
 
@@ -99,22 +107,52 @@ def main():
                          "auto-bypassed for windowed/recurrent archs)")
     ap.add_argument("--kv-dtype", choices=["f32", "bf16"], default="f32",
                     help="paged engine: KV arena + slot-state dtype")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: draft K tokens per "
+                         "round from a low-bit quantization of the same "
+                         "weights, verify them in one target step (paged "
+                         "engine; attention archs only — recurrent/MLA "
+                         "bypass)")
+    ap.add_argument("--draft-bits", type=float, default=2.2,
+                    help="average bit budget for the speculative draft "
+                         "quantization (used when --speculate > 0)")
     args = ap.parse_args()
+    if args.speculate and args.lockstep:
+        ap.error("--speculate needs the paged engine (drop --lockstep)")
 
     cfg = get_tiny(args.arch) if args.tiny else get_config(args.arch)
     key = jax.random.PRNGKey(0)
     params = tf.init_params(cfg, key)
 
-    if args.avg_bits:
-        print(f"calibrating + quantizing to {args.avg_bits} avg bits ...")
+    draft_params = None
+    if args.avg_bits or args.speculate:
+        stats_msg = (f"{args.avg_bits} avg bits" if args.avg_bits
+                     else "fp32 target")
+        print(f"calibrating + quantizing ({stats_msg}"
+              + (f", {args.draft_bits}-bit draft" if args.speculate else "")
+              + ") ...")
         toks = cal.zero_shot_tokens(cfg.vocab, 256)
         stats = cal.calibrate(
             lambda p, b, ctx: tf.loss_fn(cfg, p, b, ctx=ctx, scan=False),
             params, [{"tokens": jnp.asarray(toks)}])
-        params, rep = pipe.quantize_model(cfg, params, stats, args.avg_bits,
-                                          jax.random.PRNGKey(1))
-        print(f"quantized {rep.n_layers} layers, achieved "
-              f"{rep.avg_bits:.3f} bits in {rep.wall_time_s:.1f}s")
+        if args.avg_bits and args.speculate:
+            params, rep, draft_params, drep = pipe.quantize_model_dual(
+                cfg, params, stats, args.avg_bits, args.draft_bits,
+                jax.random.PRNGKey(1))
+            print(f"quantized {rep.n_layers} layers, achieved "
+                  f"{rep.avg_bits:.3f} target / {drep.avg_bits:.3f} draft "
+                  f"bits in {rep.wall_time_s + drep.wall_time_s:.1f}s")
+        elif args.avg_bits:
+            params, rep = pipe.quantize_model(cfg, params, stats,
+                                              args.avg_bits,
+                                              jax.random.PRNGKey(1))
+            print(f"quantized {rep.n_layers} layers, achieved "
+                  f"{rep.avg_bits:.3f} bits in {rep.wall_time_s:.1f}s")
+        else:   # fp32 target, quantized draft
+            draft_params, drep = pipe.quantize_model(
+                cfg, params, stats, args.draft_bits, jax.random.PRNGKey(1))
+            print(f"quantized draft: {drep.avg_bits:.3f} bits in "
+                  f"{drep.wall_time_s:.1f}s")
 
     tok = ByteTokenizer(cfg.vocab)
     prompt = tok.encode("the quick brown fox " * 8)[: args.prompt_len]
@@ -134,13 +172,18 @@ def main():
                           prefix_cache=args.prefix_cache,
                           kv_dtype=(jnp.bfloat16 if args.kv_dtype == "bf16"
                                     else jnp.float32))
-        engine = PagedServer(cfg, params, pool, fused=not args.unfused)
+        engine = PagedServer(cfg, params, pool, fused=not args.unfused,
+                             draft_params=draft_params,
+                             speculate=args.speculate)
         results = engine.run([Request(rid=i, prompt=np.asarray(prompt),
                                       max_new=args.gen)
                               for i in range(args.requests)])
         sample = results[0].tokens
         extra = (f"paged, occupancy={engine.stats['mean_occupancy']:.2f}, "
                  f"decode_traces={engine.decode_trace_count}")
+        if engine.speculate:
+            extra += (f", speculate={engine.speculate}, acceptance_rate="
+                      f"{engine.stats['acceptance_rate']:.2f}")
         if engine.prefix_cache is not None:
             extra += (f", prefix_hit_rate="
                       f"{engine.stats['prefix_hit_rate']:.2f}, "

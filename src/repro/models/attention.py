@@ -188,6 +188,29 @@ def paged_write_indices(pos: jax.Array, ring_cap: jax.Array,
     return pb, off
 
 
+def paged_multi_write_indices(positions: jax.Array, ring_cap: jax.Array,
+                              block_tables: jax.Array, block_size: int,
+                              write_mask: jax.Array | None = None):
+    """(physical block, in-block offset) for writing a span of positions.
+
+    The multi-token sibling of ``paged_write_indices``, used by the
+    speculative verify / draft catch-up steps: ``positions`` (B, W) are each
+    slot's absolute positions, ``ring_cap`` (B,) the per-slot ring
+    capacities, ``block_tables`` (B, MB) the per-slot tables.  Positions
+    whose ``write_mask`` (B, W) entry is False — inactive slots, or a
+    catch-up position whose KV is already valid (rewriting it could perturb
+    a shared prefix-cache block) — are redirected to the null block 0, so
+    one fixed-shape scatter serves every slot regardless of churn.
+    """
+    li = (positions % ring_cap[:, None]).astype(jnp.int32)
+    off = li % block_size
+    pb = jnp.take_along_axis(block_tables, li // block_size, axis=1)
+    if write_mask is not None:
+        pb = jnp.where(write_mask, pb, 0)
+        off = jnp.where(write_mask, off, 0)
+    return pb, off
+
+
 def paged_decode_attention(q: jax.Array, k_arena: jax.Array,
                            v_arena: jax.Array, block_table: jax.Array,
                            pos: jax.Array, ring_cap: jax.Array, *,

@@ -444,6 +444,92 @@ def decode_step_paged(cfg: ModelConfig, params: dict, caches: list,
     return logits[:, 0], new_caches
 
 
+def layer_verify_paged(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
+                       cache: dict, pos0: jax.Array, active: jax.Array,
+                       block_tables: jax.Array, ring_cap: jax.Array,
+                       write_mask: jax.Array):
+    """One layer, W tokens per slot, against the paged pool (speculative
+    verify / draft catch-up).
+
+    h (S, W, d); pos0 (S,) each slot's first absolute position; active (S,);
+    block_tables (S, MB); ring_cap (S,); write_mask (S, W) selects which of
+    the W positions commit KV to the arena (masked writes land on the null
+    block).  Attention gathers pre-``pos0`` history from the arena exactly
+    like chunked prefill and is causal within the W-token span, so the
+    logits at position ``pos0 + i`` condition on the first i fed tokens —
+    the property the acceptance rule needs.  Attention-only: recurrent/MLA
+    state is sequential (re-feeding positions would corrupt it), which is
+    why those archs bypass speculation (DESIGN.md §9).
+    """
+    if mixer != "attn":
+        raise NotImplementedError(
+            f"speculative verify supports attention mixers only (got "
+            f"{mixer!r}); recurrent/MLA archs bypass speculation")
+    b, w, d = h.shape
+    hn = apply_norm(cfg.norm, h, lp["ln1"])
+    new_cache = dict(cache)
+    positions = pos0[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    p = lp["attn"]
+    posb = positions
+    if cfg.pos == "mrope":
+        posb = jnp.broadcast_to(positions[None], (3, b, w)).astype(jnp.int32)
+    q, k, v = _attn_qkv(cfg, p, hn, posb)
+    k_hist = attnmod.paged_gather_kv(cache["k"], block_tables)
+    v_hist = attnmod.paged_gather_kv(cache["v"], block_tables)
+    hist_pos = attnmod.paged_slot_positions(pos0, ring_cap, k_hist.shape[1])
+    out = attnmod.paged_prefill_attention(q, k_hist, v_hist, hist_pos, k, v,
+                                          positions, window=cfg.window)
+    mix = linear(p["wo"], out.reshape(b, w, cfg.n_heads * cfg.hd))
+    block_size = cache["k"].shape[1]
+    pb, off = attnmod.paged_multi_write_indices(positions, ring_cap,
+                                                block_tables, block_size,
+                                                write_mask)
+    new_cache["k"] = cache["k"].at[pb, off].set(k.astype(cache["k"].dtype))
+    new_cache["v"] = cache["v"].at[pb, off].set(v.astype(cache["v"].dtype))
+    h = h + mix.astype(h.dtype)
+    h2 = apply_norm(cfg.norm, h, lp["ln2"])
+    y, _ = _ffn_apply(cfg, lp, h2, None, "ver")
+    return h + y.astype(h.dtype), new_cache
+
+
+def decode_verify_paged(cfg: ModelConfig, params: dict, caches: list,
+                        tokens: jax.Array, pos0: jax.Array, active: jax.Array,
+                        block_tables: jax.Array, ring_cap: jax.Array,
+                        write_mask: jax.Array, scan: bool = True):
+    """Score W tokens per slot in one batched step: tokens (S, W) starting
+    at per-slot positions ``pos0`` -> (logits (S, W, V), new caches).
+
+    The speculative-decoding workhorse (DESIGN.md §9): the target model
+    verifies a draft's k proposals (W = k+1: last accepted token + k drafts)
+    in a single fixed-shape dispatch, and the draft model uses the same step
+    at W = 2 to catch up after an all-accept round.  Like
+    ``decode_step_paged``, every churning input is a fixed-shape array, so
+    the step compiles exactly once per (model, W).  Inactive slots run inert
+    (embeddings zeroed, writes redirected to the null block).
+    """
+    if cfg.enc_dec:
+        raise NotImplementedError(
+            "paged serving does not support encoder-decoder archs")
+    h = embed_tokens(cfg, params, tokens)
+    if cfg.pos == "sinusoidal":
+        d = h.shape[-1]
+        table = sinusoidal_positions(caches_context(caches, cfg), d)
+        positions = pos0[:, None] + jnp.arange(tokens.shape[1],
+                                               dtype=jnp.int32)[None, :]
+        h = h + table[jnp.minimum(positions, table.shape[0] - 1)].astype(h.dtype)
+    h = jnp.where(active[:, None, None], h, 0)
+    wmask = write_mask & active[:, None]
+
+    def fn(mixer, lp, hh, cs):
+        return layer_verify_paged(cfg, mixer, lp, hh, cs, pos0, active,
+                                  block_tables, ring_cap, wmask)
+
+    h, new_caches = _apply_layers(cfg, params, caches, h, fn, scan)
+    h = apply_norm(cfg.norm, h, params["final_norm"])
+    logits = linear(params["lm_head"], h)
+    return logits, new_caches
+
+
 def layer_prefill_chunk(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
                         cache: dict, pos0: jax.Array, slot: jax.Array,
                         bt_row: jax.Array, ring_cap: jax.Array):

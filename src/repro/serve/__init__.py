@@ -3,11 +3,15 @@
 ``pool``   — fixed block arena + per-request block tables + slot arrays;
              refcounted block ownership + content-addressed prefix cache.
 ``engine`` — request queue, admission control (with prefix reuse / COW),
-             chunked prefill interleaved with decode, per-request completion.
+             chunked prefill interleaved with decode, per-request
+             completion, and optional self-speculative decoding (a low-bit
+             draft quantization proposes tokens the target verifies in one
+             batched step; DESIGN.md §9).
 """
-from .engine import PagedServer, Request
+from .engine import PagedServer, Request, RequestResult, speculative_accept
 from .pool import (BlockAllocator, PoolConfig, PrefixCache, init_pool_caches,
                    request_blocks)
 
-__all__ = ["PagedServer", "Request", "BlockAllocator", "PoolConfig",
-           "PrefixCache", "init_pool_caches", "request_blocks"]
+__all__ = ["PagedServer", "Request", "RequestResult", "BlockAllocator",
+           "PoolConfig", "PrefixCache", "init_pool_caches", "request_blocks",
+           "speculative_accept"]

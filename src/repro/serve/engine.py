@@ -23,6 +23,19 @@ their blocks — fully-written blocks stay cached on an LRU that is evicted
 only under allocation pressure.  Pure-attention, non-windowed archs only;
 ring-window blocks mutate in place and recurrent/MLA state is per-slot, so
 those configs bypass the cache entirely.
+
+Self-speculative decoding (DESIGN.md §9): with ``draft_params`` (a second,
+aggressively low-bit quantization of the SAME weights — see
+``core.pipeline.quantize_model_dual``) and ``speculate=k``, the decode
+phase becomes draft-propose / target-verify: the draft decodes k tokens
+autoregressively through its own KV arena (same block tables as the
+target's, so prefix hits warm both), the target scores all k+1 positions in
+one batched ``decode_verify_paged`` step, and the standard rejection-
+sampling acceptance rule emits between 1 and k+1 tokens per round while
+preserving the target distribution exactly (greedy mode is token-identical
+to non-speculative decoding).  Attention archs only; recurrent/MLA archs
+bypass speculation because their sequential per-slot state cannot absorb
+rejected positions.
 """
 from __future__ import annotations
 
@@ -56,6 +69,9 @@ class Request:
 
 @dataclasses.dataclass
 class RequestResult:
+    """Completion record for one request: the generated tokens plus the
+    admission / first-token / completion timestamps (seconds after run
+    start) the serving benchmarks turn into latency percentiles."""
     rid: int
     tokens: np.ndarray               # generated tokens (<= max_new)
     t_admit: float                   # seconds after run start
@@ -76,29 +92,112 @@ class _InFlight:
     t_first: float = 0.0
     chain: object = None             # prefix-cache hash of last full block
     n_hashed: int = 0                # full blocks matched/registered so far
+    draft_pos: int = 0               # draft-KV-valid positions (speculation)
+
+
+def speculative_accept(target_logits: np.ndarray, draft_logits: np.ndarray,
+                       draft_tokens: np.ndarray, temperature: float,
+                       rng: np.random.Generator):
+    """Standard speculative-sampling acceptance rule for one slot's round.
+
+    ``target_logits`` (k+1, V) are the target model's logits at the k+1
+    verified positions (last accepted token + k draft tokens);
+    ``draft_logits`` (k, V) are the logits each ``draft_tokens[i]`` was
+    sampled from.  Greedy (``temperature <= 0``): accept ``d_i`` while it
+    equals the target argmax at its position, emit the target argmax at the
+    first mismatch, emit the bonus argmax after a full accept — every
+    emitted token is a target argmax, so greedy speculation is
+    token-identical to non-speculative decoding.  Sampling
+    (``temperature > 0``): accept ``d_i`` with probability
+    ``min(1, p_t(d_i) / p_d(d_i))``, on rejection sample from the residual
+    ``normalize(max(p_t - p_d, 0))``, after a full accept sample the bonus
+    from the target's last distribution — the marginal distribution of
+    emitted tokens equals target-only sampling (Leviathan et al., 2023;
+    pinned statistically in tests/test_speculative.py).  Returns
+    ``(tokens, n_accepted)`` with ``len(tokens) == n_accepted + 1``.
+    """
+    k = len(draft_tokens)
+    out: list[int] = []
+    if temperature <= 0.0:
+        for i in range(k):
+            t_star = int(np.argmax(target_logits[i]))
+            out.append(t_star)
+            if int(draft_tokens[i]) != t_star:
+                return out, i
+        out.append(int(np.argmax(target_logits[k])))
+        return out, k
+
+    def dist(logits):
+        z = logits.astype(np.float64) / temperature
+        e = np.exp(z - z.max())
+        return e / e.sum()
+
+    for i in range(k):
+        p_t, p_d = dist(target_logits[i]), dist(draft_logits[i])
+        d = int(draft_tokens[i])
+        if rng.random() < min(1.0, p_t[d] / max(p_d[d], 1e-300)):
+            out.append(d)
+            continue
+        resid = np.maximum(p_t - p_d, 0.0)
+        s = resid.sum()
+        p = resid / s if s > 0.0 else p_t
+        out.append(int(rng.choice(p.size, p=p)))
+        return out, i
+    p_t = dist(target_logits[k])
+    out.append(int(rng.choice(p_t.size, p=p_t)))
+    return out, k
 
 
 class PagedServer:
-    """Continuous-batching engine; greedy or temperature sampling.
+    """Continuous-batching engine over the paged KV pool; greedy or
+    temperature sampling.
 
     ``fused`` selects the RHT+qmatmul fusion for every traced function of
     this engine via the scoped ``qops.fusion`` context (fixed per engine —
-    the jitted step is traced under it exactly once).
+    each jitted step is traced under it exactly once).  ``draft_params`` +
+    ``speculate=k`` turn on self-speculative decoding (draft proposes k
+    tokens, target verifies them in one batched step; see the module
+    docstring and DESIGN.md §9); recurrent/MLA archs silently bypass
+    speculation and run the plain decode loop.  Construct once per (model,
+    PoolConfig) — all serving state (arenas, allocator, queues, stats)
+    lives on the instance, and ``run`` drains a workload to completion.
     """
 
     def __init__(self, cfg: ModelConfig, params: dict,
                  pool: PoolConfig | None = None, *, fused: bool = True,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 draft_params: dict | None = None, speculate: int = 0):
         if cfg.enc_dec:
             raise ValueError(
                 "PagedServer does not support encoder-decoder archs")
+        if speculate < 0:
+            raise ValueError(f"speculate must be >= 0 (got {speculate})")
+        if speculate and draft_params is None:
+            raise ValueError("speculate > 0 requires draft_params "
+                             "(see core.pipeline.quantize_model_dual)")
         self.cfg = cfg
         self.params = params
         self.pool = pool or PoolConfig()
         self.fused = fused
         self.temperature = temperature
         self.seed = seed
+        # Speculation needs KV that is addressable by absolute position so
+        # rejected tokens can simply be overwritten; sequential per-slot
+        # state (RWKV/RG-LRU/MLA latents) cannot roll back, so those archs
+        # bypass and serve through the plain decode loop (DESIGN.md §9).
+        self.speculating = bool(speculate) and all(
+            mx == "attn" for mx in cfg.pattern)
+        self.speculate = speculate if self.speculating else 0
+        self.draft_params = draft_params if self.speculating else None
+        if self.speculating and self.pool.lookahead < speculate:
+            # verify/draft steps write up to `speculate` positions past the
+            # accepted frontier; reserve ring capacity so those writes can
+            # never wrap onto live history (window or prompt)
+            self.pool = dataclasses.replace(self.pool, lookahead=speculate)
         self.caches = init_pool_caches(cfg, params, self.pool)
+        self.draft_caches = (init_pool_caches(cfg, self.draft_params,
+                                              self.pool)
+                             if self.speculating else None)
         # Prefix caching needs blocks that are immutable once written:
         # pure-attention archs without a sliding window.  Windowed archs
         # ring-reuse their blocks in place, and recurrent/MLA state lives in
@@ -114,6 +213,9 @@ class PagedServer:
             request_blocks(cfg, self.pool, self.pool.max_context), 1)
         self.has_attn = "attn" in cfg.pattern
         self.decode_trace_count = 0
+        self.draft_trace_count = 0        # single-token draft steps
+        self.catchup_trace_count = 0      # 2-token draft catch-up steps
+        self.verify_trace_count = 0       # (k+1)-token target verify steps
         self.stats: dict = {}
         self._pending: collections.deque[Request] = collections.deque()
         self._prefilling: collections.deque[_InFlight] = collections.deque()
@@ -127,30 +229,67 @@ class PagedServer:
             return decmod.decode_step_paged(cfg, params_, caches, tokens,
                                             pos, active, bts, ring)
 
+        def _draft_step(params_, caches, tokens, pos, active, bts, ring):
+            self.draft_trace_count += 1       # trace-time side effect only
+            return decmod.decode_step_paged(cfg, params_, caches, tokens,
+                                            pos, active, bts, ring)
+
         def _chunk(params_, caches, toks, pos0, slot, bt, ring):
             return decmod.prefill_chunk_paged(cfg, params_, caches, toks,
                                               pos0, slot, bt, ring)
+
+        def _verify(params_, caches, tokens, pos0, active, bts, ring, wmask):
+            self.verify_trace_count += 1      # trace-time side effect only
+            return decmod.decode_verify_paged(cfg, params_, caches, tokens,
+                                              pos0, active, bts, ring, wmask)
+
+        def _catchup(params_, caches, tokens, pos0, active, bts, ring, wmask):
+            self.catchup_trace_count += 1     # trace-time side effect only
+            return decmod.decode_verify_paged(cfg, params_, caches, tokens,
+                                              pos0, active, bts, ring, wmask)
 
         def _cow(caches, src, dst):
             # clone one physical block's KV across every layer arena
             return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), caches)
 
         self._step = jax.jit(_step, donate_argnums=(1,))
+        self._draft_step = jax.jit(_draft_step, donate_argnums=(1,))
         self._chunk = jax.jit(_chunk, donate_argnums=(1,))
+        self._verify = jax.jit(_verify, donate_argnums=(1,))
+        self._catchup = jax.jit(_catchup, donate_argnums=(1,))
         self._cow = jax.jit(_cow, donate_argnums=(0,))
 
     # ------------------------------------------------------------- plumbing
 
     def _sample(self, logits: np.ndarray, rid: int, step: int) -> int:
+        """One token from ``logits``: greedy argmax at temperature 0, else
+        Gumbel-max sampling with a per-(request, step) deterministic RNG."""
         if self.temperature <= 0.0:
             return int(np.argmax(logits))
         rng = np.random.default_rng((self.seed, rid, step))
         g = rng.gumbel(size=logits.shape)
         return int(np.argmax(logits / self.temperature + g))
 
+    def _draft_sample(self, logits: np.ndarray, rid: int, step: int,
+                      i: int) -> int:
+        """Draft proposal i of a speculative round: greedy argmax, or a
+        sample from softmax(logits / T) — the exact distribution the
+        acceptance rule divides by."""
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits))
+        rng = np.random.default_rng((self.seed, rid, step, i, 1))
+        z = logits.astype(np.float64) / self.temperature
+        e = np.exp(z - z.max())
+        return int(rng.choice(e.size, p=e / e.sum()))
+
     # ------------------------------------------------------------ lifecycle
 
     def submit(self, req: Request) -> None:
+        """Queue a request for admission (it will not start before
+        ``req.arrival``).  Validates up front that the request can ever be
+        served by this pool — non-empty prompt, at least one generated
+        token, and a total footprint (prompt + max_new, plus speculative
+        lookahead) that fits ``max_context`` and the block arena."""
         if len(req.prompt) < 1 or req.max_new < 1:
             raise ValueError(
                 f"request {req.rid}: needs a non-empty prompt and "
@@ -202,6 +341,11 @@ class PagedServer:
                 # the partially-matching block's contents belong
                 self.caches = self._cow(self.caches, jnp.int32(cow_src),
                                         jnp.int32(fresh[0]))
+                if self.speculating:
+                    # the draft arena shares block tables: clone its copy too
+                    self.draft_caches = self._cow(self.draft_caches,
+                                                  jnp.int32(cow_src),
+                                                  jnp.int32(fresh[0]))
                 self.allocator.decref(cow_src)
                 self.stats["prefix_cow"] = self.stats.get("prefix_cow", 0) + 1
             blocks = hits + fresh
@@ -221,7 +365,7 @@ class PagedServer:
             self._prefilling.append(_InFlight(
                 req=req, slot=slot, blocks=blocks, bt_row=bt_row,
                 ring_cap=ring_cap, filled=cached, t_admit=now,
-                chain=parent, n_hashed=len(hits)))
+                chain=parent, n_hashed=len(hits), draft_pos=cached))
 
     def _register_blocks(self, st: _InFlight, seq, upto: int) -> None:
         """Register st's fully-written blocks covering positions < upto
@@ -266,7 +410,17 @@ class PagedServer:
                 self.params, self.caches, toks, jnp.int32(st.filled),
                 jnp.int32(st.slot), jnp.asarray(st.bt_row),
                 jnp.int32(st.ring_cap))
+            if self.speculating:
+                # the draft arena must hold the prompt too — prefill it in
+                # the same chunks (cheap: the draft's packed codes are the
+                # low-budget quantization); its logits are unused
+                _, self.draft_caches = self._chunk(
+                    self.draft_params, self.draft_caches, toks,
+                    jnp.int32(st.filled), jnp.int32(st.slot),
+                    jnp.asarray(st.bt_row), jnp.int32(st.ring_cap))
         st.filled += c
+        if self.speculating:
+            st.draft_pos = st.filled
         self.stats["prefill_chunks"] = self.stats.get("prefill_chunks", 0) + 1
         self.stats["prefill_tokens"] = self.stats.get("prefill_tokens", 0) + c
         if self.prefix_cache is not None:
@@ -316,12 +470,111 @@ class PagedServer:
             if len(st.out) >= st.req.max_new or tok == st.req.eos:
                 self._finish(st, now, results)
 
+    # ---------------------------------------------------------- speculation
+
+    def _spec_decode_once(self, t0: float,
+                          results: dict[int, RequestResult]) -> None:
+        """One draft-propose / target-verify round over the whole slot set.
+
+        Draft phase: a fixed-shape 2-token catch-up step (feeds the tokens
+        at positions pos-1 and pos; the first position's arena write is
+        masked unless that slot has a post-all-accept hole) followed by k-1
+        single-token draft steps, yielding k proposals per slot and the
+        draft logits each was sampled from.  Verify phase: the target
+        scores [last, d_1..d_k] at positions pos..pos+k in one batched
+        ``decode_verify_paged`` dispatch.  Acceptance runs host-side per
+        slot (``speculative_accept``), emitting 1..k+1 tokens per round.
+        """
+        s, k = self.pool.max_slots, self.speculate
+        catch = np.zeros((s, 2), np.int32)    # tokens at pos-1, pos
+        pos = np.zeros(s, np.int32)
+        active = np.zeros(s, bool)
+        hole = np.zeros(s, bool)
+        bts = np.zeros((s, self.table_width), np.int32)
+        ring = np.ones(s, np.int32)
+        for slot, st in self._active.items():
+            p = len(st.req.prompt) + len(st.out) - 1
+            pos[slot] = p
+            catch[slot, 0] = (st.out[-2] if len(st.out) >= 2
+                              else st.req.prompt[-1])
+            catch[slot, 1] = st.out[-1]
+            active[slot] = True
+            # after an all-accept round the bonus token's predecessor (d_k)
+            # was never fed to the draft: position p-1 is a hole the
+            # catch-up step must commit; otherwise the rewrite is masked so
+            # shared prefix-cache blocks are never touched
+            hole[slot] = st.draft_pos == p - 1
+            bts[slot] = st.bt_row
+            ring[slot] = st.ring_cap
+        wmask = np.ones((s, 2), bool)
+        wmask[:, 0] = hole
+        with qops.fusion(self.fused):
+            dlog, self.draft_caches = self._catchup(
+                self.draft_params, self.draft_caches, jnp.asarray(catch),
+                jnp.asarray(pos - 1), jnp.asarray(active), jnp.asarray(bts),
+                jnp.asarray(ring), jnp.asarray(wmask))
+        dl = np.asarray(dlog[:, 1])           # draft logits at position pos
+        draft_logits = np.zeros((s, k) + dl.shape[1:], np.float32)
+        draft_tokens = np.zeros((s, k), np.int32)
+        toks = np.zeros((s, 1), np.int32)
+        for i in range(k):
+            draft_logits[:, i] = dl
+            for slot, st in self._active.items():
+                d = self._draft_sample(dl[slot], st.req.rid, len(st.out), i)
+                draft_tokens[slot, i] = d
+                toks[slot, 0] = d
+            if i < k - 1:
+                with qops.fusion(self.fused):
+                    nxt, self.draft_caches = self._draft_step(
+                        self.draft_params, self.draft_caches,
+                        jnp.asarray(toks), jnp.asarray(pos + 1 + i),
+                        jnp.asarray(active), jnp.asarray(bts),
+                        jnp.asarray(ring))
+                dl = np.asarray(nxt)
+        verify_toks = np.concatenate([catch[:, 1:2], draft_tokens], axis=1)
+        with qops.fusion(self.fused):
+            tlog, self.caches = self._verify(
+                self.params, self.caches, jnp.asarray(verify_toks),
+                jnp.asarray(pos), jnp.asarray(active), jnp.asarray(bts),
+                jnp.asarray(ring), jnp.ones((s, k + 1), bool))
+        tlog = np.asarray(tlog)
+        now = time.monotonic() - t0           # after the step has completed
+        self.stats["spec_rounds"] = self.stats.get("spec_rounds", 0) + 1
+        self.stats.setdefault("occupancy", []).append(
+            len(self._active) / self.pool.max_slots)
+        for slot in list(self._active):
+            st = self._active[slot]
+            # greedy needs no RNG (and warmup requests may carry negative
+            # rids, which SeedSequence rejects)
+            rng = (np.random.default_rng(
+                       (self.seed, st.req.rid, len(st.out), 7))
+                   if self.temperature > 0.0 else None)
+            emitted, n_acc = speculative_accept(
+                tlog[slot], draft_logits[slot], draft_tokens[slot],
+                self.temperature, rng)
+            self.stats["spec_proposed"] = (
+                self.stats.get("spec_proposed", 0) + k)
+            self.stats["spec_accepted"] = (
+                self.stats.get("spec_accepted", 0) + n_acc)
+            p = int(pos[slot])
+            # draft KV is valid through the last accepted draft position
+            # (the replacement/bonus token is never fed to the draft)
+            st.draft_pos = min(p + n_acc + 1, p + k)
+            for tok in emitted:
+                st.out.append(int(tok))
+                if (len(st.out) >= st.req.max_new or tok == st.req.eos):
+                    break
+            if len(st.out) >= st.req.max_new or st.out[-1] == st.req.eos:
+                self._finish(st, now, results)
+
     # ------------------------------------------------------------------ run
 
     def run(self, requests: list[Request] | None = None
             ) -> dict[int, RequestResult]:
         """Serve until every submitted request completes.  Returns
-        rid -> RequestResult; aggregate stats land in ``self.stats``."""
+        rid -> RequestResult; aggregate stats land in ``self.stats``
+        (occupancy, prefill/prefix counters, and — when speculating —
+        spec_rounds / spec_proposed / spec_accepted / acceptance_rate)."""
         for r in requests or []:
             self.submit(r)
         self._pending = collections.deque(
@@ -333,7 +586,10 @@ class PagedServer:
             if self._prefilling:
                 self._prefill_one(t0, results)
             if self._active:
-                self._decode_once(t0, results)
+                if self.speculate:
+                    self._spec_decode_once(t0, results)
+                else:
+                    self._decode_once(t0, results)
             elif not self._prefilling:
                 if self._pending:
                     wait = self._pending[0].arrival - (time.monotonic() - t0)
@@ -341,6 +597,10 @@ class PagedServer:
                         time.sleep(min(wait, 0.05))
         occ = self.stats.get("occupancy", [])
         self.stats["mean_occupancy"] = float(np.mean(occ)) if occ else 0.0
+        if self.speculate:
+            prop = self.stats.get("spec_proposed", 0)
+            self.stats["acceptance_rate"] = (
+                self.stats.get("spec_accepted", 0) / prop if prop else 0.0)
         if self.prefix_cache is not None:
             pt = self.stats.get("prompt_tokens", 0)
             self.stats["prefix_hit_rate"] = (

@@ -43,8 +43,19 @@ from repro.models.config import ModelConfig
 
 @dataclasses.dataclass(frozen=True)
 class PoolConfig:
-    """Sizing of the paged pool; all shapes derived here are static, so the
-    jitted decode step compiles once per (model, PoolConfig)."""
+    """Static sizing of the paged KV pool.
+
+    Every shape the jitted serving steps see is derived from these fields,
+    so one engine compiles its decode/prefill/verify steps exactly once per
+    (model, PoolConfig) — batch churn changes array *contents* only.
+    ``num_blocks=None`` sizes the arena so every slot can hold a
+    ``max_context`` request simultaneously (admission never blocks on
+    blocks); pass an explicit count to exercise allocation pressure.
+    ``lookahead`` is extra per-request ring capacity in tokens, reserved by
+    the speculative engine (set automatically to its ``speculate`` depth) so
+    verify-step writes for later-rejected draft tokens can never clobber
+    still-needed history — see DESIGN.md §9.
+    """
     max_slots: int = 8          # concurrent in-flight requests
     block_size: int = 16        # tokens per KV block
     max_context: int = 512      # per-request cap (prompt + generation)
@@ -54,8 +65,10 @@ class PoolConfig:
     prefix_cache: bool = True   # content-addressed KV block reuse (engines
     #   enable it only for archs whose blocks are immutable once written)
     kv_dtype: Any = jnp.float32  # arena + per-slot state dtype (f32 | bf16)
+    lookahead: int = 0          # extra ring tokens for speculative writes
 
     def resolved_num_blocks(self, cfg: ModelConfig) -> int:
+        """Arena size in physical blocks (the +1 is the null block)."""
         if self.num_blocks is not None:
             return self.num_blocks
         per = request_blocks(cfg, self, self.max_context)
@@ -65,10 +78,14 @@ class PoolConfig:
 def request_blocks(cfg: ModelConfig, pool: PoolConfig, total_len: int) -> int:
     """Blocks a request of ``total_len`` tokens needs (0 for attention-free
     archs).  Sliding-window archs are capped at the window: their blocks are
-    ring-reused in place."""
+    ring-reused in place.  ``pool.lookahead`` tokens are added on top of the
+    capped capacity so a speculating engine can write draft/verify KV up to
+    ``lookahead`` positions past the accepted frontier without wrapping onto
+    live history (rejected-token writes land in slots the stored-position
+    validity masks already exclude)."""
     if "attn" not in cfg.pattern:
         return 0
-    cap = decmod.attn_capacity(cfg, total_len)
+    cap = decmod.attn_capacity(cfg, total_len) + pool.lookahead
     return -(-cap // pool.block_size)
 
 

@@ -1,0 +1,79 @@
+"""Documentation front door stays honest: README/DESIGN internal links
+must resolve (files and heading anchors), and every `launch/serve.py` CLI
+flag must appear in the README's CLI reference.  Runs in tier-1 and as the
+CI docs job."""
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style heading anchor: lowercase, drop punctuation (keeping
+    word chars, hyphens and spaces), spaces -> hyphens."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s, flags=re.ASCII)
+    return s.replace(" ", "-")
+
+
+def _anchors(md_path: Path) -> set:
+    out = set()
+    in_code = False
+    for line in md_path.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+        elif not in_code and line.startswith("#"):
+            out.add(_slug(line.lstrip("#")))
+    return out
+
+
+def _broken_links(md_path: Path) -> list:
+    errors = []
+    for target in LINK_RE.findall(md_path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path, _, anchor = target.partition("#")
+        dest = (md_path.parent / path) if path else md_path
+        if not dest.exists():
+            errors.append(f"{md_path.name}: broken link ({target})")
+        elif anchor and dest.suffix == ".md" and anchor not in _anchors(dest):
+            errors.append(f"{md_path.name}: missing anchor ({target})")
+    return errors
+
+
+def test_readme_exists_with_required_sections():
+    readme = ROOT / "README.md"
+    assert readme.exists(), "README.md is the front door — it must exist"
+    text = readme.read_text()
+    for needle in ("Quickstart", "Architecture map", "CLI reference",
+                   "BENCH_serve.json", "DESIGN.md"):
+        assert needle in text, f"README.md lacks a {needle!r} section"
+
+
+def test_readme_links_resolve():
+    errors = _broken_links(ROOT / "README.md")
+    assert not errors, "\n".join(errors)
+
+
+def test_design_links_resolve():
+    errors = _broken_links(ROOT / "DESIGN.md")
+    assert not errors, "\n".join(errors)
+
+
+def test_design_has_speculative_section():
+    anchors = _anchors(ROOT / "DESIGN.md")
+    assert any(a.startswith("9-self-speculative") for a in anchors), (
+        "DESIGN.md §9 (speculative decoding) missing")
+
+
+def test_every_serve_cli_flag_documented_in_readme():
+    src = (ROOT / "src" / "repro" / "launch" / "serve.py").read_text()
+    flags = re.findall(r'add_argument\(\s*"(--[a-z0-9-]+)"', src)
+    assert "--speculate" in flags and "--draft-bits" in flags  # regex sanity
+    readme = (ROOT / "README.md").read_text()
+    missing = [f for f in flags if f not in readme]
+    assert not missing, (
+        f"launch/serve.py flags missing from the README CLI reference: "
+        f"{missing}")

@@ -147,8 +147,8 @@ def test_qlinear_apply_with_tricks_across_paths(path):
                                atol=1e-4 * float(jnp.abs(y_unfused).max() + 1))
 
 
-def test_fusion_context_scoped_and_shim_deprecated():
-    """fusion() nests/unwinds; set_fused still works but warns."""
+def test_fusion_context_scoped():
+    """fusion() nests/unwinds; the deprecated set_fused shim is gone."""
     assert qops.fused_enabled()
     with qops.fusion(False):
         assert not qops.fused_enabled()
@@ -156,12 +156,7 @@ def test_fusion_context_scoped_and_shim_deprecated():
             assert qops.fused_enabled()
         assert not qops.fused_enabled()
     assert qops.fused_enabled()
-    with pytest.warns(DeprecationWarning):
-        qops.set_fused(False)
-    assert not qops.fused_enabled()
-    with pytest.warns(DeprecationWarning):
-        qops.set_fused(True)
-    assert qops.fused_enabled()
+    assert not hasattr(qops, "set_fused")
 
 
 def test_single_token_decode_shape():

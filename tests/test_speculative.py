@@ -1,0 +1,305 @@
+"""Self-speculative decoding correctness (DESIGN.md §9).
+
+The contract, in order of importance: (1) greedy speculation is
+token-identical to the non-speculative paged path no matter how bad the
+draft is; (2) at temperature > 0 the acceptance rule emits tokens with
+exactly the target model's distribution; (3) the draft/catch-up/verify
+steps each compile once under batch churn and mixed accept/reject lengths;
+(4) ``quantize_model_dual`` really shares the calibration and rotation
+between target and draft.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import calibrate as cal
+from repro.core import pipeline as pipe
+from repro.models import transformer as tf
+from repro.serve import PagedServer, PoolConfig, Request, speculative_accept
+
+PROMPT_LENS = [5, 9, 16, 3, 11]
+GEN_LENS = [12, 4, 9, 7, 5]
+
+# Parity archs per the tentpole: dense GQA and sliding-window MoE (the
+# windowed ring is the hard case — speculative writes must not clobber
+# still-windowed history; PoolConfig.lookahead guarantees it).
+SPEC_ARCHS = ["llama2-7b", "mixtral-8x7b"]
+
+
+def _nodrop(cfg):
+    if cfg.moe is not None:
+        return cfg.with_(moe=dataclasses.replace(cfg.moe,
+                                                 capacity_factor=64.0))
+    return cfg
+
+
+def _tiny(arch):
+    return _nodrop(registry.get_tiny(arch))
+
+
+def _requests(cfg, n=len(PROMPT_LENS), seed=0):
+    reqs = []
+    for i, (pl, gl) in enumerate(list(zip(PROMPT_LENS, GEN_LENS))[:n]):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(seed * 100 + i), (pl,), 0, cfg.vocab),
+            np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=gl))
+    return reqs
+
+
+def _noisy(params, scale, seed=42):
+    """An imperfect draft: the same weights plus gaussian noise — enough
+    model mismatch to produce genuinely mixed accept/reject rounds."""
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    out = [l + scale * jax.random.normal(k, l.shape, l.dtype)
+           if jnp.issubdtype(l.dtype, jnp.floating) else l
+           for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def _pool(**kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("max_context", 32)
+    kw.setdefault("prefill_chunk", 4)
+    return PoolConfig(**kw)
+
+
+# ------------------------------------------------------------ greedy parity
+
+
+@pytest.mark.parametrize("arch", SPEC_ARCHS)
+@pytest.mark.parametrize("draft_kind", ["perfect", "noisy"])
+def test_spec_greedy_parity(arch, draft_kind):
+    """Greedy spec-on output is token-identical to spec-off, whether the
+    draft agrees with the target (all-accept + bonus path) or frequently
+    diverges (rejection + replacement path)."""
+    cfg = _tiny(arch)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    draft = params if draft_kind == "perfect" else _noisy(params, 0.005)
+    reqs = _requests(cfg)
+    ref = PagedServer(cfg, params, _pool()).run(
+        [dataclasses.replace(r) for r in reqs])
+    spec = PagedServer(cfg, params, _pool(), draft_params=draft, speculate=3)
+    got = spec.run(reqs)
+    assert set(got) == {r.rid for r in reqs}
+    for r in reqs:
+        np.testing.assert_array_equal(
+            got[r.rid].tokens, ref[r.rid].tokens,
+            err_msg=f"{arch}/{draft_kind}: rid={r.rid}")
+    rate = spec.stats["acceptance_rate"]
+    if draft_kind == "perfect":
+        assert rate == 1.0          # identical models: every draft accepted
+    else:
+        assert 0.0 < rate < 1.0     # mixed accept/reject actually exercised
+
+
+def test_spec_eos_truncates_mid_round():
+    """A request whose EOS token is emitted mid-round stops at its first
+    occurrence, exactly like the non-speculative engine."""
+    cfg = _tiny("llama2-7b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _requests(cfg)
+    ref = PagedServer(cfg, params, _pool()).run(
+        [dataclasses.replace(r) for r in reqs])
+    eos = int(ref[0].tokens[2])
+    n_stop = int(np.argmax(np.asarray(ref[0].tokens) == eos)) + 1
+    reqs = [dataclasses.replace(r, eos=eos if r.rid == 0 else None)
+            for r in reqs]
+    spec = PagedServer(cfg, params, _pool(), draft_params=_noisy(params, 0.005),
+                       speculate=3)
+    got = spec.run(reqs)
+    assert int(got[0].tokens[-1]) == eos
+    assert len(got[0].tokens) == n_stop
+    np.testing.assert_array_equal(got[0].tokens, ref[0].tokens[:n_stop])
+    # pool fully drained back (draft arena shares the allocator)
+    assert spec.allocator.free_blocks == spec.allocator.num_blocks - 1
+
+
+def test_spec_bypasses_recurrent_archs():
+    """Recurrent state can't roll back rejected tokens: the engine bypasses
+    speculation (documented in DESIGN.md §9) and still serves correctly."""
+    cfg = _tiny("rwkv6-3b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _requests(cfg, n=3)
+    ref = PagedServer(cfg, params, _pool()).run(
+        [dataclasses.replace(r) for r in reqs])
+    eng = PagedServer(cfg, params, _pool(), draft_params=params, speculate=3)
+    assert not eng.speculating and eng.speculate == 0
+    got = eng.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(got[r.rid].tokens, ref[r.rid].tokens)
+    assert eng.verify_trace_count == 0          # spec path never ran
+
+
+# ------------------------------------------------------- compile-once + API
+
+
+def test_spec_steps_compile_once_under_churn():
+    """Catch-up, draft and verify steps each trace exactly once while the
+    batch churns through admissions/completions with mixed accept/reject
+    lengths (the single-token decode step is never used in spec mode)."""
+    cfg = _tiny("llama2-7b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    spec = PagedServer(cfg, params, _pool(), draft_params=_noisy(params, 0.005),
+                       speculate=3)
+    results = spec.run(_requests(cfg))
+    assert len(results) == len(PROMPT_LENS)
+    assert spec.stats["spec_rounds"] > 1
+    assert 0 < spec.stats["spec_accepted"] < spec.stats["spec_proposed"]
+    assert spec.catchup_trace_count == 1, "draft catch-up step retraced"
+    assert spec.draft_trace_count == 1, "draft decode step retraced"
+    assert spec.verify_trace_count == 1, "target verify step retraced"
+    assert spec.decode_trace_count == 0
+
+
+def test_spec_requires_draft_params():
+    cfg = _tiny("llama2-7b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="draft_params"):
+        PagedServer(cfg, params, _pool(), speculate=2)
+
+
+def test_spec_reserves_lookahead():
+    """A speculating engine pads per-request ring capacity by k so verify
+    writes for later-rejected tokens can never wrap onto live history."""
+    cfg = _tiny("llama2-7b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    eng = PagedServer(cfg, params, _pool(), draft_params=params, speculate=3)
+    assert eng.pool.lookahead == 3
+    base = PagedServer(cfg, params, _pool())
+    assert base.pool.lookahead == 0
+
+
+# --------------------------------------------------- acceptance-rule units
+
+
+def test_accept_rule_greedy_semantics():
+    k, v = 3, 8
+    rng = np.random.default_rng(0)
+    tl = rng.normal(size=(k + 1, v))
+    stars = np.argmax(tl, axis=1)
+    # all proposals match -> k accepts + bonus argmax
+    toks, n = speculative_accept(tl, tl[:k], stars[:k], 0.0, rng)
+    assert n == k and toks == list(stars)
+    # first mismatch at position 1 -> one accept, then the correction
+    bad = stars[:k].copy()
+    bad[1] = (bad[1] + 1) % v
+    toks, n = speculative_accept(tl, tl[:k], bad, 0.0, rng)
+    assert n == 1 and toks == [int(stars[0]), int(stars[1])]
+    # immediate mismatch -> zero accepts, correction only
+    bad0 = stars[:k].copy()
+    bad0[0] = (bad0[0] + 1) % v
+    toks, n = speculative_accept(tl, tl[:k], bad0, 0.0, rng)
+    assert n == 0 and toks == [int(stars[0])]
+
+
+def test_accept_rule_preserves_target_distribution():
+    """Statistical pin of the rejection-sampling lemma: across many rounds
+    with draft proposals drawn from the draft distribution, the empirical
+    distribution of emitted tokens at each position matches target-only
+    sampling (total-variation distance within Monte-Carlo noise)."""
+    k, v, temp, trials = 2, 6, 0.8, 30000
+    gen = np.random.default_rng(123)
+    tl = gen.normal(scale=1.5, size=(k + 1, v))
+    dl = gen.normal(scale=1.5, size=(k, v))
+
+    def dist(logits):
+        e = np.exp(logits / temp - (logits / temp).max())
+        return e / e.sum()
+
+    p_t = [dist(tl[i]) for i in range(k + 1)]
+    p_d = [dist(dl[i]) for i in range(k)]
+    rng = np.random.default_rng(7)
+    counts = [np.zeros(v) for _ in range(2)]
+    n_seen = [0, 0]
+    for _ in range(trials):
+        drafts = np.array([rng.choice(v, p=p_d[i]) for i in range(k)])
+        toks, _ = speculative_accept(tl, dl, drafts, temp, rng)
+        for pos in range(min(len(toks), 2)):
+            counts[pos][toks[pos]] += 1
+            n_seen[pos] += 1
+    for pos in range(2):
+        emp = counts[pos] / n_seen[pos]
+        tv = 0.5 * np.abs(emp - p_t[pos]).sum()
+        assert tv < 0.02, (f"position {pos}: TV {tv:.4f} vs target-only "
+                           f"sampling (n={n_seen[pos]})")
+
+
+def test_spec_engine_sampling_smoke():
+    """Temperature > 0 end-to-end: the speculating engine completes a mixed
+    workload and reports sane acceptance stats (the distribution itself is
+    pinned at the acceptance-rule level above)."""
+    cfg = _tiny("llama2-7b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    spec = PagedServer(cfg, params, _pool(), temperature=0.9,
+                       draft_params=_noisy(params, 0.005), speculate=2)
+    results = spec.run(_requests(cfg, n=3))
+    for rid, res in results.items():
+        assert len(res.tokens) == GEN_LENS[rid]
+    assert 0.0 <= spec.stats["acceptance_rate"] <= 1.0
+
+
+# ------------------------------------------------------- dual quantization
+
+
+def test_dual_quantization_shares_calibration_and_rotation():
+    """quantize_model_dual: one stats dict, one PRNG key -> the draft's
+    Rademacher sign leaves are the *same buffers* as the target's, fp
+    leaves are shared by reference, and the draft's realized budget is
+    genuinely lower."""
+    cfg = _tiny("llama2-7b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    toks = cal.zero_shot_tokens(cfg.vocab, 32)
+    stats = cal.calibrate(
+        lambda p, b, ctx: tf.loss_fn(cfg, p, b, ctx=ctx, scan=False),
+        params, [{"tokens": jnp.asarray(toks)}])
+    tq, tr, dq, dr = pipe.quantize_model_dual(
+        cfg, params, stats, 4.0, 2.2, jax.random.PRNGKey(1),
+        bit_choices=(1, 2, 3, 4, 5), n_candidates=2)
+    assert dr.avg_bits < tr.avg_bits
+    n_checked = 0
+    for jpos in range(len(tq["layers"])):
+        for idx in range(len(tq["layers"][jpos])):
+            tl, dl = tq["layers"][jpos][idx], dq["layers"][jpos][idx]
+
+            def walk(t, d):
+                nonlocal n_checked
+                for key in t:
+                    if isinstance(t[key], dict):
+                        walk(t[key], d[key])
+                    elif hasattr(t[key], "signs1"):
+                        assert d[key].signs1 is t[key].signs1
+                        assert (d[key].signs2 is t[key].signs2
+                                or d[key].signs2 is None)
+                        n_checked += 1
+            walk(tl, dl)
+    assert n_checked > 0
+    assert dq["embed"] is tq["embed"]           # fp leaves shared
+
+
+def test_spec_engine_with_real_dual_quantization():
+    """End-to-end: a dual-quantized (target, draft) pair serves greedily
+    through the speculating engine, token-identical to the target-only
+    engine."""
+    cfg = _tiny("llama2-7b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    toks = cal.zero_shot_tokens(cfg.vocab, 32)
+    stats = cal.calibrate(
+        lambda p, b, ctx: tf.loss_fn(cfg, p, b, ctx=ctx, scan=False),
+        params, [{"tokens": jnp.asarray(toks)}])
+    tq, _, dq, _ = pipe.quantize_model_dual(
+        cfg, params, stats, 3.0, 1.8, jax.random.PRNGKey(1),
+        bit_choices=(1, 2, 3, 4), n_candidates=2)
+    reqs = _requests(cfg, n=2)
+    ref = PagedServer(cfg, tq, _pool()).run(
+        [dataclasses.replace(r) for r in reqs])
+    spec = PagedServer(cfg, tq, _pool(), draft_params=dq, speculate=2)
+    got = spec.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(got[r.rid].tokens, ref[r.rid].tokens)

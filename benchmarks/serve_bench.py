@@ -19,8 +19,17 @@ Part 4 — self-speculative decoding (DESIGN.md §9): the same weights
 dual-quantized (shared calibration + rotation) into a target and a low-bit
 draft, served spec-on vs spec-off on a generation-heavy workload; outputs
 must stay token-identical (greedy) and the leg records acceptance rate and
-the tok/s speedup.  Everything lands in ``BENCH_serve.json`` so the serving
-perf trajectory is tracked across PRs."""
+the tok/s speedup.
+
+Part 5 — paged-attention kernel vs dense gather (DESIGN.md §10): the
+mixed-length Poisson workload served with the decode attention read routed
+through the Pallas flash-decode kernel over the block arena vs the gather
+reference; outputs must stay token-identical and the leg records tok/s,
+p50/p95 and the kernel speedup.  (Off-TPU the kernel leg runs the Pallas
+interpreter — the recorded ``interpret_mode`` flags that its speedup is
+parity/plumbing verification there, not a perf claim; the perf trajectory
+is the TPU story.)  Everything lands in ``BENCH_serve.json`` so the
+serving perf trajectory is tracked across PRs."""
 from __future__ import annotations
 
 import json
@@ -90,12 +99,14 @@ def _spec_workload(cfg, corpus, n=4, plen=12, gen=24, seed=13):
 
 
 def _paged_serve(cfg, params, reqs, fused: bool, prefix_cache: bool = False,
-                 draft_params=None, speculate: int = 0):
+                 draft_params=None, speculate: int = 0,
+                 paged_kernel: bool | None = None):
     pool = PoolConfig(max_slots=MAX_SLOTS, block_size=8,
                       max_context=max(len(r.prompt) + r.max_new
                                       for r in reqs),
                       prefill_chunk=16, prefix_cache=prefix_cache)
     engine = PagedServer(cfg, params, pool, fused=fused,
+                         paged_kernel=paged_kernel,
                          draft_params=draft_params, speculate=speculate)
     # warm compile caches (decode step + every prefill-chunk length the
     # workload will produce) so the timed region measures serving, not XLA
@@ -196,8 +207,10 @@ def run(row: Row, gen: int = 16, requests: int = 4):
     for mode in ("paged", "lockstep"):
         for fused in (True, False):
             if mode == "paged":
-                wall, toks, lat, estats, _ = _paged_serve(cfg, qp, reqs,
-                                                          fused)
+                res = _paged_serve(cfg, qp, reqs, fused)
+                if fused:
+                    paged_fused = res   # reused as a Part-5 leg below
+                wall, toks, lat, estats, _ = res
                 occ = estats["mean_occupancy"]
             else:
                 wall, toks, lat, occ = _lockstep_serve(cfg, qp, reqs, fused)
@@ -258,6 +271,41 @@ def run(row: Row, gen: int = 16, requests: int = 4):
         "speculate_k": 3,
         "draft_avg_bits": float(drep.avg_bits),
         "token_mismatches_vs_baseline": int(spec_mismatch)}
+
+    # --- paged-attention kernel vs dense gather on the Poisson workload.
+    # The Part-2 paged-fused leg ran with paged_kernel=None, which resolves
+    # to the backend default (kernel on TPU, gather elsewhere) — so it IS
+    # one of the two legs here; only the non-default path is served again.
+    if jax.default_backend() == "tpu":
+        kern = paged_fused
+        gather = _paged_serve(cfg, qp, reqs, True, paged_kernel=False)
+    else:
+        gather = paged_fused
+        kern = _paged_serve(cfg, qp, reqs, True, paged_kernel=True)
+    kern_mismatch = sum(
+        not np.array_equal(kern[4][r.rid].tokens, gather[4][r.rid].tokens)
+        for r in reqs)
+    tok_s_gather, tok_s_kern = gather[1] / gather[0], kern[1] / kern[0]
+    for label, (wall, toks, lat, estats, _) in (("gather", gather),
+                                                ("kernel", kern)):
+        row.add(f"serve/paged_attn_{label}", wall / max(toks, 1) * 1e6,
+                f"tok_s={toks/wall:.1f};p50_s={np.percentile(lat, 50):.2f};"
+                f"p95_s={np.percentile(lat, 95):.2f};"
+                f"occupancy={estats['mean_occupancy']:.2f}")
+    row.add("serve/paged_attn_summary", 0.0,
+            f"speedup={tok_s_kern / max(tok_s_gather, 1e-9):.2f}x;"
+            f"token_mismatches={kern_mismatch};"
+            f"interpret={jax.default_backend() != 'tpu'}")
+    bench_json["workloads"]["paged_attention_kernel"] = {
+        "tok_s_kernel": tok_s_kern,
+        "tok_s_gather": tok_s_gather,
+        "speedup": tok_s_kern / max(tok_s_gather, 1e-9),
+        "p50_s_kernel": float(np.percentile(kern[2], 50)),
+        "p95_s_kernel": float(np.percentile(kern[2], 95)),
+        "p50_s_gather": float(np.percentile(gather[2], 50)),
+        "p95_s_gather": float(np.percentile(gather[2], 95)),
+        "interpret_mode": bool(jax.default_backend() != "tpu"),
+        "token_mismatches_vs_gather": int(kern_mismatch)}
 
     bench_json["workloads"]["shared_prefix"] = {
         "tok_s_warm": warm[1] / warm[0],

@@ -1,15 +1,18 @@
 """Pallas TPU kernels for RaanA's compute hot-spots.
 
-Four kernels — three are TPU-native adaptations of stages the paper runs on
-CPU/GPU (DESIGN.md §3), the fourth (flash_attention) is the beyond-paper
-lever identified by EXPERIMENTS.md §Perf:
+Five kernels — three are TPU-native adaptations of stages the paper runs on
+CPU/GPU (DESIGN.md §3), the other two (flash_attention, paged_attention)
+are the beyond-paper inference-efficiency levers:
 
-  * ``hadamard``     — RHT as two MXU matmuls per VMEM-resident tile
-                       (Kronecker-factorized FWHT; Hadacore's tensor-core idea
-                       re-thought for the 128x128 systolic array).
-  * ``qmatmul``      — fused unpack -> dequant -> GEMM with the Alg. 3
-                       rescale/z epilogue; codes cross HBM packed.
-  * ``rabitq_quant`` — per-column candidate-sweep code search + LS rescale.
+  * ``hadamard``        — RHT as two MXU matmuls per VMEM-resident tile
+                          (Kronecker-factorized FWHT; Hadacore's tensor-core
+                          idea re-thought for the 128x128 systolic array).
+  * ``qmatmul``         — fused unpack -> dequant -> GEMM with the Alg. 3
+                          rescale/z epilogue; codes cross HBM packed.
+  * ``rabitq_quant``    — per-column candidate-sweep code search + LS rescale.
+  * ``flash_attention`` — fused online-softmax forward (EXPERIMENTS.md §Perf).
+  * ``paged_attention`` — flash-decoding over the serving engine's block
+                          arena, block table chased in-kernel (DESIGN.md §10).
 
 Every ``ops.py`` wrapper dispatches: real ``pallas_call`` on TPU,
 ``interpret=True`` execution in tests, and a pure-jnp reference path for

@@ -12,7 +12,10 @@ skipped), and ``--kv-dtype bf16`` halves the KV arena bytes.  ``--lockstep``
 keeps the legacy ``BatchedServer`` behavior (aligned prefill, whole-batch
 decode until the last request finishes) as the A/B baseline.  ``--unfused``
 restores the two-kernel RHT+qmatmul composition (rotated activations
-round-trip through HBM) for A/B measurement.  ``--speculate K`` turns on
+round-trip through HBM) for A/B measurement, and ``--paged-kernel`` /
+``--no-paged-kernel`` pins the decode attention read to the Pallas
+flash-decode kernel over the block arena vs the dense gather path
+(DESIGN.md §10; unset, the backend decides).  ``--speculate K`` turns on
 self-speculative decoding: the same weights are quantized a second time at
 ``--draft-bits`` (sharing the calibration pass and Hadamard rotation with
 the target quantization) and the engine runs draft-propose/target-verify
@@ -38,6 +41,7 @@ from repro.configs.registry import get_config, get_tiny
 from repro.core import calibrate as cal
 from repro.core import pipeline as pipe
 from repro.data import ByteTokenizer
+from repro.kernels.paged_attention import ops as pops
 from repro.kernels.qmatmul import ops as qops
 from repro.models import decode as decmod
 from repro.models import transformer as tf
@@ -107,6 +111,13 @@ def main():
                          "auto-bypassed for windowed/recurrent archs)")
     ap.add_argument("--kv-dtype", choices=["f32", "bf16"], default="f32",
                     help="paged engine: KV arena + slot-state dtype")
+    ap.add_argument("--paged-kernel", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="route paged attention through the Pallas "
+                         "flash-decode kernel over the block arena "
+                         "(interpret-mode off TPU); --no-paged-kernel "
+                         "forces the dense gather path; default lets the "
+                         "backend decide (kernel on TPU)")
     ap.add_argument("--speculate", type=int, default=0, metavar="K",
                     help="self-speculative decoding: draft K tokens per "
                          "round from a low-bit quantization of the same "
@@ -173,14 +184,18 @@ def main():
                           kv_dtype=(jnp.bfloat16 if args.kv_dtype == "bf16"
                                     else jnp.float32))
         engine = PagedServer(cfg, params, pool, fused=not args.unfused,
+                             paged_kernel=args.paged_kernel,
                              draft_params=draft_params,
                              speculate=args.speculate)
         results = engine.run([Request(rid=i, prompt=np.asarray(prompt),
                                       max_new=args.gen)
                               for i in range(args.requests)])
         sample = results[0].tokens
+        with pops.paged_kernel(args.paged_kernel):
+            attn_path = "kernel" if pops.kernel_enabled() else "gather"
         extra = (f"paged, occupancy={engine.stats['mean_occupancy']:.2f}, "
-                 f"decode_traces={engine.decode_trace_count}")
+                 f"decode_traces={engine.decode_trace_count}, "
+                 f"attn={attn_path}")
         if engine.speculate:
             extra += (f", speculate={engine.speculate}, acceptance_rate="
                       f"{engine.stats['acceptance_rate']:.2f}")

@@ -215,34 +215,22 @@ def paged_decode_attention(q: jax.Array, k_arena: jax.Array,
                            v_arena: jax.Array, block_table: jax.Array,
                            pos: jax.Array, ring_cap: jax.Array, *,
                            window: Optional[int] = None) -> jax.Array:
-    """One-token attention over block-table-gathered K/V.
+    """One-token attention over the paged arena.
 
     q (B,1,H,hd); arenas (N, bs, KV, hd); block_table (B, MB); pos (B,) =
-    tokens inserted including the current one; ring_cap (B,) per-request ring
-    capacity.  Equivalent to ``decode_attention`` on a dense per-request cache
-    (window masking is exact even when ring_cap is rounded up to a block
-    multiple, because validity is computed from each slot's stored absolute
-    position rather than from raw slot age).
+    tokens inserted including the current one (whose K/V must already be in
+    the arena); ring_cap (B,) per-request ring capacity.  Equivalent to
+    ``decode_attention`` on a dense per-request cache (window masking is
+    exact even when ring_cap is rounded up to a block multiple, because
+    validity is computed from each slot's stored absolute position rather
+    than from raw slot age).  Dispatches through
+    ``kernels.paged_attention.ops`` — the Pallas flash-decode kernel reads
+    arena blocks in place via the block table (DESIGN.md §10); the dense
+    gather reference is the off-TPU default.
     """
-    b, _, h, hd = q.shape
-    k = paged_gather_kv(k_arena, block_table)    # (B, L, KV, hd)
-    v = paged_gather_kv(v_arena, block_table)
-    length, kv = k.shape[1], k.shape[2]
-    g = h // kv
-    scale = hd ** -0.5
-    qf = (q.astype(jnp.float32) * scale).astype(k.dtype)
-    qf = qf.reshape(b, kv, g, hd)
-    s = jnp.einsum("bkgd,bskd->bkgs", qf, k,
-                   preferred_element_type=jnp.float32)        # (b,kv,g,L)
-    stored = paged_slot_positions(pos, ring_cap, length)      # (b, L)
-    valid = stored >= 0
-    if window is not None:
-        valid &= stored > (pos[:, None] - 1) - window
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v,
-                     preferred_element_type=jnp.float32)
-    return out.reshape(b, 1, h, hd).astype(q.dtype)
+    from repro.kernels.paged_attention import ops as pops  # late: no cycle
+    return pops.paged_attention(q, k_arena, v_arena, block_table, pos,
+                                ring_cap, window=window)
 
 
 def paged_prefill_attention(q: jax.Array, k_hist: jax.Array, v_hist: jax.Array,

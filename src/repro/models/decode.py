@@ -465,6 +465,7 @@ def layer_verify_paged(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
         raise NotImplementedError(
             f"speculative verify supports attention mixers only (got "
             f"{mixer!r}); recurrent/MLA archs bypass speculation")
+    from repro.kernels.paged_attention import ops as pops  # late: no cycle
     b, w, d = h.shape
     hn = apply_norm(cfg.norm, h, lp["ln1"])
     new_cache = dict(cache)
@@ -474,18 +475,32 @@ def layer_verify_paged(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
     if cfg.pos == "mrope":
         posb = jnp.broadcast_to(positions[None], (3, b, w)).astype(jnp.int32)
     q, k, v = _attn_qkv(cfg, p, hn, posb)
-    k_hist = attnmod.paged_gather_kv(cache["k"], block_tables)
-    v_hist = attnmod.paged_gather_kv(cache["v"], block_tables)
-    hist_pos = attnmod.paged_slot_positions(pos0, ring_cap, k_hist.shape[1])
-    out = attnmod.paged_prefill_attention(q, k_hist, v_hist, hist_pos, k, v,
-                                          positions, window=cfg.window)
-    mix = linear(p["wo"], out.reshape(b, w, cfg.n_heads * cfg.hd))
     block_size = cache["k"].shape[1]
     pb, off = attnmod.paged_multi_write_indices(positions, ring_cap,
                                                 block_tables, block_size,
                                                 write_mask)
     new_cache["k"] = cache["k"].at[pb, off].set(k.astype(cache["k"].dtype))
     new_cache["v"] = cache["v"].at[pb, off].set(v.astype(cache["v"].dtype))
+    if pops.kernel_enabled():
+        # kernel path: the span's K/V is committed above, so one flash-decode
+        # sweep over the arena covers history + span (causality within the
+        # span falls out of the stored-position mask).  Write-before-read is
+        # safe: a masked position is either an inactive slot (output unread)
+        # or a catch-up position whose identical K/V is already arena-
+        # resident, and PoolConfig.lookahead reserves the ring capacity the
+        # up-to-W-past-frontier writes land in (DESIGN.md §9/§10).
+        out = pops.paged_attention(q, new_cache["k"], new_cache["v"],
+                                   block_tables, pos0 + w, ring_cap,
+                                   window=cfg.window)
+    else:
+        k_hist = attnmod.paged_gather_kv(cache["k"], block_tables)
+        v_hist = attnmod.paged_gather_kv(cache["v"], block_tables)
+        hist_pos = attnmod.paged_slot_positions(pos0, ring_cap,
+                                                k_hist.shape[1])
+        out = attnmod.paged_prefill_attention(q, k_hist, v_hist, hist_pos,
+                                              k, v, positions,
+                                              window=cfg.window)
+    mix = linear(p["wo"], out.reshape(b, w, cfg.n_heads * cfg.hd))
     h = h + mix.astype(h.dtype)
     h2 = apply_norm(cfg.norm, h, lp["ln2"])
     y, _ = _ffn_apply(cfg, lp, h2, None, "ver")

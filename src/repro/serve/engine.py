@@ -40,6 +40,7 @@ rejected positions.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Optional
@@ -48,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.paged_attention import ops as pops
 from repro.kernels.qmatmul import ops as qops
 from repro.models import decode as decmod
 from repro.models.config import ModelConfig
@@ -154,7 +156,12 @@ class PagedServer:
 
     ``fused`` selects the RHT+qmatmul fusion for every traced function of
     this engine via the scoped ``qops.fusion`` context (fixed per engine —
-    each jitted step is traced under it exactly once).  ``draft_params`` +
+    each jitted step is traced under it exactly once).  ``paged_kernel``
+    likewise pins the attention read: True routes every paged attention
+    (decode / catch-up / verify) through the Pallas flash-decode kernel
+    over the block arena (interpret-mode off TPU), False through the dense
+    gather reference, and None (default) lets the backend decide — kernel
+    on TPU, gather elsewhere (DESIGN.md §10).  ``draft_params`` +
     ``speculate=k`` turn on self-speculative decoding (draft proposes k
     tokens, target verifies them in one batched step; see the module
     docstring and DESIGN.md §9); recurrent/MLA archs silently bypass
@@ -165,6 +172,7 @@ class PagedServer:
 
     def __init__(self, cfg: ModelConfig, params: dict,
                  pool: PoolConfig | None = None, *, fused: bool = True,
+                 paged_kernel: bool | None = None,
                  temperature: float = 0.0, seed: int = 0,
                  draft_params: dict | None = None, speculate: int = 0):
         if cfg.enc_dec:
@@ -179,6 +187,7 @@ class PagedServer:
         self.params = params
         self.pool = pool or PoolConfig()
         self.fused = fused
+        self.paged_kernel = paged_kernel
         self.temperature = temperature
         self.seed = seed
         # Speculation needs KV that is addressable by absolute position so
@@ -260,6 +269,14 @@ class PagedServer:
         self._cow = jax.jit(_cow, donate_argnums=(0,))
 
     # ------------------------------------------------------------- plumbing
+
+    @contextlib.contextmanager
+    def _kernel_scope(self):
+        """The engine's fixed kernel selections (RHT+qmatmul fusion, paged
+        attention kernel-vs-gather), applied to every traced step — each
+        jitted function keeps whatever it was traced under."""
+        with qops.fusion(self.fused), pops.paged_kernel(self.paged_kernel):
+            yield
 
     def _sample(self, logits: np.ndarray, rid: int, step: int) -> int:
         """One token from ``logits``: greedy argmax at temperature 0, else
@@ -405,7 +422,7 @@ class PagedServer:
             c = min(c, st.ring_cap)   # scatter uniqueness within a chunk
         toks = jnp.asarray(st.req.prompt[st.filled:st.filled + c],
                            jnp.int32)[None]
-        with qops.fusion(self.fused):
+        with self._kernel_scope():
             logits, self.caches = self._chunk(
                 self.params, self.caches, toks, jnp.int32(st.filled),
                 jnp.int32(st.slot), jnp.asarray(st.bt_row),
@@ -453,7 +470,7 @@ class PagedServer:
             active[slot] = True
             bts[slot] = st.bt_row
             ring[slot] = st.ring_cap
-        with qops.fusion(self.fused):
+        with self._kernel_scope():
             logits, self.caches = self._step(
                 self.params, self.caches, jnp.asarray(tokens),
                 jnp.asarray(pos), jnp.asarray(active), jnp.asarray(bts),
@@ -508,7 +525,7 @@ class PagedServer:
             ring[slot] = st.ring_cap
         wmask = np.ones((s, 2), bool)
         wmask[:, 0] = hole
-        with qops.fusion(self.fused):
+        with self._kernel_scope():
             dlog, self.draft_caches = self._catchup(
                 self.draft_params, self.draft_caches, jnp.asarray(catch),
                 jnp.asarray(pos - 1), jnp.asarray(active), jnp.asarray(bts),
@@ -524,7 +541,7 @@ class PagedServer:
                 draft_tokens[slot, i] = d
                 toks[slot, 0] = d
             if i < k - 1:
-                with qops.fusion(self.fused):
+                with self._kernel_scope():
                     nxt, self.draft_caches = self._draft_step(
                         self.draft_params, self.draft_caches,
                         jnp.asarray(toks), jnp.asarray(pos + 1 + i),
@@ -532,7 +549,7 @@ class PagedServer:
                         jnp.asarray(ring))
                 dl = np.asarray(nxt)
         verify_toks = np.concatenate([catch[:, 1:2], draft_tokens], axis=1)
-        with qops.fusion(self.fused):
+        with self._kernel_scope():
             tlog, self.caches = self._verify(
                 self.params, self.caches, jnp.asarray(verify_toks),
                 jnp.asarray(pos), jnp.asarray(active), jnp.asarray(bts),

@@ -4,6 +4,15 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_collection_modifyitems(items):
+    """Everything not explicitly tier2 is tier1, so ``-m tier1`` and
+    ``-m tier2`` partition the suite exactly (pytest.ini has the tier
+    definitions; CI shards them across a job matrix)."""
+    for item in items:
+        if "tier2" not in item.keywords:
+            item.add_marker(pytest.mark.tier1)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

@@ -9,44 +9,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from helpers import (GEN_LENS, PROMPT_LENS, mixed_requests, small_pool,
+                     tiny)
 
-from repro.configs import registry
 from repro.launch.serve import BatchedServer
 from repro.models import transformer as tf
 from repro.serve import PagedServer, PoolConfig, Request
 from repro.serve.pool import BlockAllocator, request_blocks
 
-# Mixed prompt/gen lengths; slots < number of requests so completions must
-# free capacity for queued requests to join mid-flight.
-PROMPT_LENS = [5, 9, 16, 3, 11]
-GEN_LENS = [12, 4, 9, 7, 5]
+pytestmark = pytest.mark.tier2  # slow end-to-end serving suite
 
 # One arch per cache family: dense GQA, sliding-window MoE (ring blocks),
 # MLA latent slots, RWKV recurrent slots, RG-LRU + windowed-attn hybrid.
 PARITY_ARCHS = ["llama2-7b", "mixtral-8x7b", "deepseek-v2-236b", "rwkv6-3b",
                 "recurrentgemma-2b"]
-
-
-def _nodrop(cfg):
-    # Routing must be batch-composition independent for token parity.
-    if cfg.moe is not None:
-        return cfg.with_(moe=dataclasses.replace(cfg.moe,
-                                                 capacity_factor=64.0))
-    return cfg
-
-
-def _tiny(arch):
-    return _nodrop(registry.get_tiny(arch))
-
-
-def _requests(cfg, seed=0):
-    reqs = []
-    for i, (pl, gl) in enumerate(zip(PROMPT_LENS, GEN_LENS)):
-        prompt = np.asarray(jax.random.randint(
-            jax.random.PRNGKey(seed * 100 + i), (pl,), 0, cfg.vocab),
-            np.int32)
-        reqs.append(Request(rid=i, prompt=prompt, max_new=gl))
-    return reqs
 
 
 def _lockstep_reference(cfg, params, reqs):
@@ -61,12 +37,11 @@ def _lockstep_reference(cfg, params, reqs):
 
 @pytest.mark.parametrize("arch", PARITY_ARCHS)
 def test_paged_matches_lockstep_greedy(arch):
-    cfg = _tiny(arch)
+    cfg = tiny(arch)
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    reqs = _requests(cfg)
+    reqs = mixed_requests(cfg)
     ref = _lockstep_reference(cfg, params, reqs)
-    pool = PoolConfig(max_slots=2, block_size=4, max_context=32,
-                      prefill_chunk=4)
+    pool = small_pool()
     engine = PagedServer(cfg, params, pool)
     results = engine.run(reqs)
     assert set(results) == {r.rid for r in reqs}
@@ -82,12 +57,11 @@ def test_decode_step_compiles_once_under_churn():
     """Batch composition churns (2 slots, 5 mixed-length requests, queued
     joins, completions) yet the jitted paged decode step traces exactly
     once — the no-retrace property the engine's occupancy depends on."""
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    pool = PoolConfig(max_slots=2, block_size=4, max_context=32,
-                      prefill_chunk=8)
+    pool = small_pool(prefill_chunk=8)
     engine = PagedServer(cfg, params, pool)
-    results = engine.run(_requests(cfg))
+    results = engine.run(mixed_requests(cfg))
     assert len(results) == len(PROMPT_LENS)
     assert engine.stats["decode_steps"] > 0
     assert engine.decode_trace_count == 1, (
@@ -97,11 +71,10 @@ def test_decode_step_compiles_once_under_churn():
 def test_eos_frees_slot_and_blocks_immediately():
     """A request hitting EOS mid-generation completes early and returns all
     of its blocks/slot to the pool."""
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    reqs = _requests(cfg)
-    pool = PoolConfig(max_slots=2, block_size=4, max_context=32,
-                      prefill_chunk=4)
+    reqs = mixed_requests(cfg)
+    pool = small_pool()
     free_ref = _lockstep_reference(cfg, params, reqs)
     # pick a token request 0 actually emits as the EOS sentinel; generation
     # must truncate at its FIRST occurrence
@@ -123,14 +96,13 @@ def test_eos_frees_slot_and_blocks_immediately():
 def test_admission_blocks_until_capacity():
     """With a pool sized for ~one request, requests serialize through
     admission control but all complete with correct outputs."""
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    reqs = _requests(cfg)[:3]
+    reqs = mixed_requests(cfg)[:3]
     need = max(request_blocks(
         cfg, PoolConfig(block_size=4, max_context=32),
         len(r.prompt) + r.max_new) for r in reqs)
-    pool = PoolConfig(max_slots=2, block_size=4, max_context=32,
-                      prefill_chunk=4, num_blocks=need + 2)
+    pool = small_pool(num_blocks=need + 2)
     ref = _lockstep_reference(cfg, params, reqs)
     engine = PagedServer(cfg, params, pool)
     results = engine.run(reqs)
@@ -152,10 +124,9 @@ def test_kv_dtype_bf16_parity():
     """The KV arena honors PoolConfig.kv_dtype: bf16 pools hold bf16 blocks
     and paged prefill+decode logits stay within bf16 rounding of the f32
     pool (teacher-forced, so the comparison is step-for-step)."""
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    pool32 = PoolConfig(max_slots=2, block_size=4, max_context=32,
-                        prefill_chunk=8)
+    pool32 = small_pool(prefill_chunk=8)
     poolbf = dataclasses.replace(pool32, kv_dtype=jnp.bfloat16)
     from repro.models import decode as decmod
     from repro.serve.pool import init_pool_caches
@@ -196,13 +167,12 @@ def test_kv_dtype_bf16_engine_serves():
     """End-to-end: a bf16-pool engine completes a mixed workload (greedy
     tokens may legitimately differ from f32 at bf16 precision, so this pins
     liveness + accounting, while the teacher-forced test pins numerics)."""
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    pool = PoolConfig(max_slots=2, block_size=4, max_context=32,
-                      prefill_chunk=4, kv_dtype=jnp.bfloat16)
+    pool = small_pool(kv_dtype=jnp.bfloat16)
     engine = PagedServer(cfg, params, pool)
     assert engine.caches[0]["k"].dtype == jnp.bfloat16
-    results = engine.run(_requests(cfg))
+    results = engine.run(mixed_requests(cfg))
     assert len(results) == len(PROMPT_LENS)
     for rid, res in results.items():
         assert len(res.tokens) == GEN_LENS[rid]
@@ -210,7 +180,7 @@ def test_kv_dtype_bf16_engine_serves():
 
 
 def test_submit_rejects_oversized():
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
     engine = PagedServer(cfg, params, PoolConfig(max_slots=1, block_size=4,
                                                  max_context=16))

@@ -6,41 +6,17 @@ divergence.  The jitted decode step must still trace exactly once whether
 admissions hit or miss the cache."""
 import dataclasses
 
-import jax
 import numpy as np
 import pytest
+from helpers import shared_prefix_requests, small_pool, tiny_model
 
-from repro.configs import registry
-from repro.models import transformer as tf
-from repro.serve import PagedServer, PoolConfig, Request
+from repro.serve import PagedServer, Request
 from repro.serve.pool import BlockAllocator, PrefixCache
 
-POOL = PoolConfig(max_slots=2, block_size=4, max_context=32, prefill_chunk=4)
+pytestmark = pytest.mark.tier2  # slow end-to-end serving suite
+
+POOL = small_pool()
 COLD = dataclasses.replace(POOL, prefix_cache=False)
-
-
-def _nodrop(cfg):
-    if cfg.moe is not None:
-        return cfg.with_(moe=dataclasses.replace(cfg.moe,
-                                                 capacity_factor=64.0))
-    return cfg
-
-
-def _model(arch):
-    cfg = _nodrop(registry.get_tiny(arch))
-    return cfg, tf.init_params(cfg, jax.random.PRNGKey(0))
-
-
-def _shared_prefix_requests(cfg, n=4, sys_len=12, tail=4, gen=6, seed=3):
-    """n requests sharing a system prompt, each with a distinct tail."""
-    rng = np.random.default_rng(seed)
-    sys_p = rng.integers(0, cfg.vocab, sys_len).astype(np.int32)
-    return [Request(rid=i,
-                    prompt=np.concatenate(
-                        [sys_p,
-                         rng.integers(0, cfg.vocab, tail).astype(np.int32)]),
-                    max_new=gen)
-            for i in range(n)]
 
 
 # one arch per relevant cache family: full attention (caches), sliding
@@ -49,8 +25,8 @@ def _shared_prefix_requests(cfg, n=4, sys_len=12, tail=4, gen=6, seed=3):
 @pytest.mark.parametrize("arch", ["llama2-7b", "mixtral-8x7b",
                                   "deepseek-v2-236b"])
 def test_greedy_identical_cache_on_vs_off(arch):
-    cfg, params = _model(arch)
-    reqs = _shared_prefix_requests(cfg)
+    cfg, params = tiny_model(arch)
+    reqs = shared_prefix_requests(cfg)
     warm = PagedServer(cfg, params, POOL)
     got = warm.run([dataclasses.replace(r) for r in reqs])
     cold = PagedServer(cfg, params, COLD)
@@ -76,9 +52,9 @@ def test_greedy_identical_cache_on_vs_off(arch):
 def test_refcounts_drain_and_survive_sharing():
     """Blocks shared by concurrent requests are released exactly once per
     owner: after the run every block is free-or-cached-idle again."""
-    cfg, params = _model("llama2-7b")
+    cfg, params = tiny_model("llama2-7b")
     engine = PagedServer(cfg, params, POOL)
-    engine.run(_shared_prefix_requests(cfg))
+    engine.run(shared_prefix_requests(cfg))
     a = engine.allocator
     assert a.free_blocks == a.num_blocks - 1
     assert not a._ref                           # no leaked references
@@ -88,7 +64,7 @@ def test_refcounts_drain_and_survive_sharing():
 def test_eviction_under_pressure_before_admission_fails():
     """A pool whose blocks are all parked in the prefix cache must shrink
     the cache (LRU first) to admit a new request rather than deadlock."""
-    cfg, params = _model("llama2-7b")
+    cfg, params = tiny_model("llama2-7b")
     rng = np.random.default_rng(9)
     # arena fits exactly one request; request 1's cached blocks occupy it
     pool = dataclasses.replace(POOL, max_slots=1, num_blocks=9)
@@ -109,7 +85,7 @@ def test_cow_divergence_mid_block():
     """A prompt that diverges mid-block from a cached sequence reuses the
     matching token prefix via a private copy-on-write clone, and the cached
     original stays intact for later exact hits."""
-    cfg, params = _model("llama2-7b")
+    cfg, params = tiny_model("llama2-7b")
     rng = np.random.default_rng(5)
     base = rng.integers(0, cfg.vocab, 16).astype(np.int32)
     div = base.copy()
@@ -130,11 +106,11 @@ def test_cow_divergence_mid_block():
 
 
 def test_decode_trace_count_one_under_hits_and_misses():
-    cfg, params = _model("llama2-7b")
+    cfg, params = tiny_model("llama2-7b")
     engine = PagedServer(cfg, params, POOL)
-    engine.run(_shared_prefix_requests(cfg))                  # misses + hits
-    engine.run(_shared_prefix_requests(cfg, seed=4))          # fresh misses
-    engine.run(_shared_prefix_requests(cfg))                  # near-full hits
+    engine.run(shared_prefix_requests(cfg))                  # misses + hits
+    engine.run(shared_prefix_requests(cfg, seed=4))          # fresh misses
+    engine.run(shared_prefix_requests(cfg))                  # near-full hits
     assert engine.stats["prefill_tokens_saved"] > 0
     assert engine.decode_trace_count == 1, (
         f"paged decode step retraced {engine.decode_trace_count} times")

@@ -14,60 +14,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from helpers import (GEN_LENS, PROMPT_LENS, mixed_requests, noisy,
+                     small_pool, tiny)
 
-from repro.configs import registry
 from repro.core import calibrate as cal
 from repro.core import pipeline as pipe
 from repro.models import transformer as tf
-from repro.serve import PagedServer, PoolConfig, Request, speculative_accept
+from repro.serve import PagedServer, speculative_accept
 
-PROMPT_LENS = [5, 9, 16, 3, 11]
-GEN_LENS = [12, 4, 9, 7, 5]
+pytestmark = pytest.mark.tier2  # slow end-to-end serving suite
 
 # Parity archs per the tentpole: dense GQA and sliding-window MoE (the
 # windowed ring is the hard case — speculative writes must not clobber
 # still-windowed history; PoolConfig.lookahead guarantees it).
 SPEC_ARCHS = ["llama2-7b", "mixtral-8x7b"]
-
-
-def _nodrop(cfg):
-    if cfg.moe is not None:
-        return cfg.with_(moe=dataclasses.replace(cfg.moe,
-                                                 capacity_factor=64.0))
-    return cfg
-
-
-def _tiny(arch):
-    return _nodrop(registry.get_tiny(arch))
-
-
-def _requests(cfg, n=len(PROMPT_LENS), seed=0):
-    reqs = []
-    for i, (pl, gl) in enumerate(list(zip(PROMPT_LENS, GEN_LENS))[:n]):
-        prompt = np.asarray(jax.random.randint(
-            jax.random.PRNGKey(seed * 100 + i), (pl,), 0, cfg.vocab),
-            np.int32)
-        reqs.append(Request(rid=i, prompt=prompt, max_new=gl))
-    return reqs
-
-
-def _noisy(params, scale, seed=42):
-    """An imperfect draft: the same weights plus gaussian noise — enough
-    model mismatch to produce genuinely mixed accept/reject rounds."""
-    leaves, treedef = jax.tree.flatten(params)
-    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
-    out = [l + scale * jax.random.normal(k, l.shape, l.dtype)
-           if jnp.issubdtype(l.dtype, jnp.floating) else l
-           for l, k in zip(leaves, keys)]
-    return jax.tree.unflatten(treedef, out)
-
-
-def _pool(**kw):
-    kw.setdefault("max_slots", 2)
-    kw.setdefault("block_size", 4)
-    kw.setdefault("max_context", 32)
-    kw.setdefault("prefill_chunk", 4)
-    return PoolConfig(**kw)
 
 
 # ------------------------------------------------------------ greedy parity
@@ -79,13 +39,14 @@ def test_spec_greedy_parity(arch, draft_kind):
     """Greedy spec-on output is token-identical to spec-off, whether the
     draft agrees with the target (all-accept + bonus path) or frequently
     diverges (rejection + replacement path)."""
-    cfg = _tiny(arch)
+    cfg = tiny(arch)
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    draft = params if draft_kind == "perfect" else _noisy(params, 0.005)
-    reqs = _requests(cfg)
-    ref = PagedServer(cfg, params, _pool()).run(
+    draft = params if draft_kind == "perfect" else noisy(params, 0.005)
+    reqs = mixed_requests(cfg)
+    ref = PagedServer(cfg, params, small_pool()).run(
         [dataclasses.replace(r) for r in reqs])
-    spec = PagedServer(cfg, params, _pool(), draft_params=draft, speculate=3)
+    spec = PagedServer(cfg, params, small_pool(), draft_params=draft,
+                       speculate=3)
     got = spec.run(reqs)
     assert set(got) == {r.rid for r in reqs}
     for r in reqs:
@@ -102,17 +63,17 @@ def test_spec_greedy_parity(arch, draft_kind):
 def test_spec_eos_truncates_mid_round():
     """A request whose EOS token is emitted mid-round stops at its first
     occurrence, exactly like the non-speculative engine."""
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    reqs = _requests(cfg)
-    ref = PagedServer(cfg, params, _pool()).run(
+    reqs = mixed_requests(cfg)
+    ref = PagedServer(cfg, params, small_pool()).run(
         [dataclasses.replace(r) for r in reqs])
     eos = int(ref[0].tokens[2])
     n_stop = int(np.argmax(np.asarray(ref[0].tokens) == eos)) + 1
     reqs = [dataclasses.replace(r, eos=eos if r.rid == 0 else None)
             for r in reqs]
-    spec = PagedServer(cfg, params, _pool(), draft_params=_noisy(params, 0.005),
-                       speculate=3)
+    spec = PagedServer(cfg, params, small_pool(),
+                       draft_params=noisy(params, 0.005), speculate=3)
     got = spec.run(reqs)
     assert int(got[0].tokens[-1]) == eos
     assert len(got[0].tokens) == n_stop
@@ -124,12 +85,13 @@ def test_spec_eos_truncates_mid_round():
 def test_spec_bypasses_recurrent_archs():
     """Recurrent state can't roll back rejected tokens: the engine bypasses
     speculation (documented in DESIGN.md §9) and still serves correctly."""
-    cfg = _tiny("rwkv6-3b")
+    cfg = tiny("rwkv6-3b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    reqs = _requests(cfg, n=3)
-    ref = PagedServer(cfg, params, _pool()).run(
+    reqs = mixed_requests(cfg, n=3)
+    ref = PagedServer(cfg, params, small_pool()).run(
         [dataclasses.replace(r) for r in reqs])
-    eng = PagedServer(cfg, params, _pool(), draft_params=params, speculate=3)
+    eng = PagedServer(cfg, params, small_pool(), draft_params=params,
+                      speculate=3)
     assert not eng.speculating and eng.speculate == 0
     got = eng.run(reqs)
     for r in reqs:
@@ -144,11 +106,11 @@ def test_spec_steps_compile_once_under_churn():
     """Catch-up, draft and verify steps each trace exactly once while the
     batch churns through admissions/completions with mixed accept/reject
     lengths (the single-token decode step is never used in spec mode)."""
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    spec = PagedServer(cfg, params, _pool(), draft_params=_noisy(params, 0.005),
-                       speculate=3)
-    results = spec.run(_requests(cfg))
+    spec = PagedServer(cfg, params, small_pool(),
+                       draft_params=noisy(params, 0.005), speculate=3)
+    results = spec.run(mixed_requests(cfg))
     assert len(results) == len(PROMPT_LENS)
     assert spec.stats["spec_rounds"] > 1
     assert 0 < spec.stats["spec_accepted"] < spec.stats["spec_proposed"]
@@ -159,20 +121,21 @@ def test_spec_steps_compile_once_under_churn():
 
 
 def test_spec_requires_draft_params():
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
     with pytest.raises(ValueError, match="draft_params"):
-        PagedServer(cfg, params, _pool(), speculate=2)
+        PagedServer(cfg, params, small_pool(), speculate=2)
 
 
 def test_spec_reserves_lookahead():
     """A speculating engine pads per-request ring capacity by k so verify
     writes for later-rejected tokens can never wrap onto live history."""
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    eng = PagedServer(cfg, params, _pool(), draft_params=params, speculate=3)
+    eng = PagedServer(cfg, params, small_pool(), draft_params=params,
+                      speculate=3)
     assert eng.pool.lookahead == 3
-    base = PagedServer(cfg, params, _pool())
+    base = PagedServer(cfg, params, small_pool())
     assert base.pool.lookahead == 0
 
 
@@ -235,11 +198,11 @@ def test_spec_engine_sampling_smoke():
     """Temperature > 0 end-to-end: the speculating engine completes a mixed
     workload and reports sane acceptance stats (the distribution itself is
     pinned at the acceptance-rule level above)."""
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    spec = PagedServer(cfg, params, _pool(), temperature=0.9,
-                       draft_params=_noisy(params, 0.005), speculate=2)
-    results = spec.run(_requests(cfg, n=3))
+    spec = PagedServer(cfg, params, small_pool(), temperature=0.9,
+                       draft_params=noisy(params, 0.005), speculate=2)
+    results = spec.run(mixed_requests(cfg, n=3))
     for rid, res in results.items():
         assert len(res.tokens) == GEN_LENS[rid]
     assert 0.0 <= spec.stats["acceptance_rate"] <= 1.0
@@ -253,7 +216,7 @@ def test_dual_quantization_shares_calibration_and_rotation():
     Rademacher sign leaves are the *same buffers* as the target's, fp
     leaves are shared by reference, and the draft's realized budget is
     genuinely lower."""
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
     toks = cal.zero_shot_tokens(cfg.vocab, 32)
     stats = cal.calibrate(
@@ -287,7 +250,7 @@ def test_spec_engine_with_real_dual_quantization():
     """End-to-end: a dual-quantized (target, draft) pair serves greedily
     through the speculating engine, token-identical to the target-only
     engine."""
-    cfg = _tiny("llama2-7b")
+    cfg = tiny("llama2-7b")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
     toks = cal.zero_shot_tokens(cfg.vocab, 32)
     stats = cal.calibrate(
@@ -296,10 +259,10 @@ def test_spec_engine_with_real_dual_quantization():
     tq, _, dq, _ = pipe.quantize_model_dual(
         cfg, params, stats, 3.0, 1.8, jax.random.PRNGKey(1),
         bit_choices=(1, 2, 3, 4), n_candidates=2)
-    reqs = _requests(cfg, n=2)
-    ref = PagedServer(cfg, tq, _pool()).run(
+    reqs = mixed_requests(cfg, n=2)
+    ref = PagedServer(cfg, tq, small_pool()).run(
         [dataclasses.replace(r) for r in reqs])
-    spec = PagedServer(cfg, tq, _pool(), draft_params=dq, speculate=2)
+    spec = PagedServer(cfg, tq, small_pool(), draft_params=dq, speculate=2)
     got = spec.run(reqs)
     for r in reqs:
         np.testing.assert_array_equal(got[r.rid].tokens, ref[r.rid].tokens)

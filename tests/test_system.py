@@ -14,6 +14,8 @@ from repro.data import LMBatchLoader, make_corpus_tokens
 from repro.launch.train import train
 from repro.models import transformer as tf
 
+pytestmark = pytest.mark.tier2  # slow end-to-end train+quantize+serve
+
 
 @pytest.fixture(scope="module")
 def trained():

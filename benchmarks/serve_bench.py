@@ -28,8 +28,18 @@ reference; outputs must stay token-identical and the leg records tok/s,
 p50/p95 and the kernel speedup.  (Off-TPU the kernel leg runs the Pallas
 interpreter — the recorded ``interpret_mode`` flags that its speedup is
 parity/plumbing verification there, not a perf claim; the perf trajectory
-is the TPU story.)  Everything lands in ``BENCH_serve.json`` so the
-serving perf trajectory is tracked across PRs."""
+is the TPU story.)
+
+Part 6 — tensor-parallel serving (DESIGN.md §11): the Poisson workload
+served TP=2 over a (1, 2) host mesh vs the TP=1 reference; greedy outputs
+must be token-identical (recorded as ``token_mismatches``).  Skipped with
+a reason when the host has fewer than 2 devices (force them on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=2``).
+
+Every leg emits the same accounting triple — ``token_mismatches`` (greedy
+parity vs its reference leg), ``interpret_mode``, ``device_kind`` — and
+everything lands in ``BENCH_serve.json`` so the serving perf trajectory is
+tracked across PRs."""
 from __future__ import annotations
 
 import json
@@ -100,14 +110,15 @@ def _spec_workload(cfg, corpus, n=4, plen=12, gen=24, seed=13):
 
 def _paged_serve(cfg, params, reqs, fused: bool, prefix_cache: bool = False,
                  draft_params=None, speculate: int = 0,
-                 paged_kernel: bool | None = None):
+                 paged_kernel: bool | None = None, mesh=None):
     pool = PoolConfig(max_slots=MAX_SLOTS, block_size=8,
                       max_context=max(len(r.prompt) + r.max_new
                                       for r in reqs),
                       prefill_chunk=16, prefix_cache=prefix_cache)
     engine = PagedServer(cfg, params, pool, fused=fused,
                          paged_kernel=paged_kernel,
-                         draft_params=draft_params, speculate=speculate)
+                         draft_params=draft_params, speculate=speculate,
+                         mesh=mesh)
     # warm compile caches (decode step + every prefill-chunk length the
     # workload will produce) so the timed region measures serving, not XLA
     chunk_lens = set()
@@ -147,7 +158,10 @@ def _lockstep_serve(cfg, params, reqs, fused: bool):
     """FIFO batches bucketed by prompt length; a batch decodes until its
     longest request finishes, finished requests holding their slot.
     Servers are built and warmed per shape bucket before the clock starts,
-    so the comparison measures serving, not per-bucket recompilation."""
+    so the comparison measures serving, not per-bucket recompilation.
+    Returns outputs per rid too (each sliced to its request's max_new, since
+    lockstep over-generates to the batch max) so lockstep legs get the same
+    token-parity accounting as paged legs."""
     with qops.fusion(fused):
         batches = _lockstep_batches(list(reqs))
         servers = []
@@ -158,22 +172,23 @@ def _lockstep_serve(cfg, params, reqs, fused: bool):
             server.generate(np.stack([r.prompt for r in batch]), 2)  # warmup
             servers.append((server, gen))
         t0 = time.time()
-        lat, toks = [], 0
+        lat, toks, outputs = [], 0, {}
         occ_num = occ_den = 0
         for batch, (server, gen) in zip(batches, servers):
             start = max(r.arrival for r in batch)   # lockstep waits for all
             now = time.time() - t0
             if now < start:
                 time.sleep(start - now)
-            server.generate(np.stack([r.prompt for r in batch]), gen)
+            out = server.generate(np.stack([r.prompt for r in batch]), gen)
             done = time.time() - t0
-            for r in batch:
+            for bi, r in enumerate(batch):
                 lat.append(done - r.arrival)
                 toks += r.max_new
+                outputs[r.rid] = out[bi, :r.max_new]
             for t in range(gen):                    # slots doing useful work
                 occ_num += sum(1 for r in batch if r.max_new > t)
                 occ_den += MAX_SLOTS
-        return time.time() - t0, toks, lat, occ_num / max(occ_den, 1)
+        return time.time() - t0, toks, lat, occ_num / max(occ_den, 1), outputs
 
 
 def run(row: Row, gen: int = 16, requests: int = 4):
@@ -201,28 +216,52 @@ def run(row: Row, gen: int = 16, requests: int = 4):
     bench(qp, "raana_4.3b_fused", fused=True)
     bench(qp, "raana_4.3b_unfused", fused=False)
 
-    # --- mixed-length Poisson workload: paged vs lockstep x fused/unfused
+    # --- mixed-length Poisson workload: paged vs lockstep x fused/unfused.
+    # Every leg (here and below) carries the same accounting triple:
+    # token_mismatches (greedy parity vs the poisson_paged_fused reference
+    # leg, or the leg's stated A/B partner), interpret_mode (True iff the
+    # leg's attention ran the Pallas kernel under the interpreter, i.e.
+    # forced on off-TPU), and device_kind.
+    device_kind = str(jax.devices()[0].device_kind)
     bench_json: dict = {"workloads": {}}
     reqs = _poisson_workload(cfg, corpus)
+
+    def _mismatches(outputs_by_rid, ref_by_rid, rs=reqs):
+        return int(sum(
+            not np.array_equal(
+                np.asarray(outputs_by_rid[r.rid])[:r.max_new],
+                np.asarray(ref_by_rid[r.rid])[:r.max_new])
+            for r in rs))
+
+    ref_outputs = None   # poisson_paged_fused outputs, set on the first leg
     for mode in ("paged", "lockstep"):
         for fused in (True, False):
             if mode == "paged":
                 res = _paged_serve(cfg, qp, reqs, fused)
                 if fused:
                     paged_fused = res   # reused as a Part-5 leg below
-                wall, toks, lat, estats, _ = res
+                wall, toks, lat, estats, results = res
                 occ = estats["mean_occupancy"]
+                outputs = {rid: r.tokens for rid, r in results.items()}
             else:
-                wall, toks, lat, occ = _lockstep_serve(cfg, qp, reqs, fused)
+                wall, toks, lat, occ, outputs = _lockstep_serve(
+                    cfg, qp, reqs, fused)
+            if ref_outputs is None:
+                ref_outputs = outputs
+            mism = _mismatches(outputs, ref_outputs)
             fl = "fused" if fused else "unfused"
             row.add(f"serve/poisson_{mode}_{fl}", wall / max(toks, 1) * 1e6,
                     f"tok_s={toks/wall:.1f};p50_s={np.percentile(lat, 50):.2f};"
-                    f"p95_s={np.percentile(lat, 95):.2f};occupancy={occ:.2f}")
+                    f"p95_s={np.percentile(lat, 95):.2f};occupancy={occ:.2f};"
+                    f"token_mismatches={mism}")
             bench_json["workloads"][f"poisson_{mode}_{fl}"] = {
                 "tok_s": toks / wall,
                 "p50_s": float(np.percentile(lat, 50)),
                 "p95_s": float(np.percentile(lat, 95)),
-                "occupancy": float(occ)}
+                "occupancy": float(occ),
+                "token_mismatches": mism,
+                "interpret_mode": False,
+                "device_kind": device_kind}
 
     # --- shared-system-prompt workload: prefix cache on vs cold pool
     preqs = _shared_prefix_workload(cfg, corpus)
@@ -270,7 +309,9 @@ def run(row: Row, gen: int = 16, requests: int = 4):
         "spec_rounds": int(sstats.get("spec_rounds", 0)),
         "speculate_k": 3,
         "draft_avg_bits": float(drep.avg_bits),
-        "token_mismatches_vs_baseline": int(spec_mismatch)}
+        "token_mismatches": int(spec_mismatch),
+        "interpret_mode": False,
+        "device_kind": device_kind}
 
     # --- paged-attention kernel vs dense gather on the Poisson workload.
     # The Part-2 paged-fused leg ran with paged_kernel=None, which resolves
@@ -305,7 +346,8 @@ def run(row: Row, gen: int = 16, requests: int = 4):
         "p50_s_gather": float(np.percentile(gather[2], 50)),
         "p95_s_gather": float(np.percentile(gather[2], 95)),
         "interpret_mode": bool(jax.default_backend() != "tpu"),
-        "token_mismatches_vs_gather": int(kern_mismatch)}
+        "token_mismatches": int(kern_mismatch),
+        "device_kind": device_kind}
 
     bench_json["workloads"]["shared_prefix"] = {
         "tok_s_warm": warm[1] / warm[0],
@@ -317,7 +359,45 @@ def run(row: Row, gen: int = 16, requests: int = 4):
         "prefill_tokens_saved": int(saved),
         "prefill_tokens_cold": int(cold[3].get("prefill_tokens", 0)),
         "prefill_tokens_warm": int(wstats.get("prefill_tokens", 0)),
-        "token_mismatches_vs_cold": int(mismatch)}
+        "token_mismatches": int(mismatch),
+        "interpret_mode": False,
+        "device_kind": device_kind}
+
+    # --- tensor-parallel: TP=2 over a (1, 2) host mesh vs the TP=1
+    # reference leg (DESIGN.md §11).  Greedy outputs must be token-
+    # identical — the TP boundary gathers disjoint column slices, it never
+    # sums partial products.  Needs 2 devices; on CPU run the bench under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=2.
+    n_dev = len(jax.devices())
+    if n_dev >= 2 and n_dev % 2 == 0:
+        from repro.launch.mesh import make_host_mesh
+        tp2 = _paged_serve(cfg, qp, reqs, True, mesh=make_host_mesh(tp=2))
+        tp_mismatch = sum(
+            not np.array_equal(tp2[4][r.rid].tokens,
+                               paged_fused[4][r.rid].tokens)
+            for r in reqs)
+        tok_s_tp1 = paged_fused[1] / paged_fused[0]
+        tok_s_tp2 = tp2[1] / tp2[0]
+        row.add("serve/tp2_vs_tp1", tp2[0] / max(tp2[1], 1) * 1e6,
+                f"tok_s_tp2={tok_s_tp2:.1f};tok_s_tp1={tok_s_tp1:.1f};"
+                f"speedup={tok_s_tp2 / max(tok_s_tp1, 1e-9):.2f}x;"
+                f"token_mismatches={tp_mismatch}")
+        bench_json["workloads"]["tp2_vs_tp1"] = {
+            "tp": 2,
+            "tok_s_tp2": tok_s_tp2,
+            "tok_s_tp1": tok_s_tp1,
+            "speedup": tok_s_tp2 / max(tok_s_tp1, 1e-9),
+            "p50_s_tp2": float(np.percentile(tp2[2], 50)),
+            "p95_s_tp2": float(np.percentile(tp2[2], 95)),
+            "token_mismatches": int(tp_mismatch),
+            "interpret_mode": False,
+            "device_kind": device_kind}
+    else:
+        bench_json["workloads"]["tp2_vs_tp1"] = {
+            "skipped": (f"needs an even device count >= 2 (have {n_dev}); "
+                        "on CPU run under XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=2"),
+            "device_kind": device_kind}
     with open("BENCH_serve.json", "w") as f:
         json.dump(bench_json, f, indent=2, sort_keys=True)
         f.write("\n")

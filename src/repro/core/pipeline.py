@@ -16,6 +16,14 @@ expert stacks are quantized; embeddings/lm_head, norms, routers, RWKV
 token-shift/decay LoRAs, RG-LRU gate block-diagonals, conv filters, and
 DeepSeek's wkv_b (needed in expanded form by the absorbed MLA decode) stay
 in full precision.
+
+The quantized artifact is tensor-parallel-ready by construction
+(DESIGN.md §11): Alg. 3's estimator is column-separable — packed codes,
+rescale, and w_out columns depend only on their own output column (the RHT
+entangles *input rows*, which is exactly why TP shards by output column and
+never by input row) — so serving places one quantization across any TP
+degree by slicing leaves along the last axis (``runtime/tp.prepare_params``)
+with no requantization and bit-identical per-column math.
 """
 from __future__ import annotations
 

@@ -64,15 +64,21 @@ class QuantizedLinear:
         """Estimate x @ W for x of shape (..., d) — Alg. 3 + trick corrections.
 
         The RHT + dequant GEMM is one fused dispatch (kernels/qmatmul/ops):
-        rotated activations stay in VMEM on the kernel path."""
+        rotated activations stay in VMEM on the kernel path.  The output
+        width is derived from ``rescale`` rather than the static ``c``:
+        under tensor-parallel serving (runtime/tp.py) the dynamic leaves
+        arrive column-sliced inside ``shard_map`` while the static metadata
+        keeps the full-width values, and every column's estimator is
+        independent, so the sliced apply is exact on its slice."""
         lead = x.shape[:-1]
+        c = self.rescale.shape[-1]        # per-shard width (== self.c at TP=1)
         x2 = x.reshape(-1, self.d).astype(jnp.float32)
         if self.out_idx is not None and self.out_idx.size:
             x_out = jnp.take(x2, self.out_idx, axis=1)
             x_rest = jnp.take(x2, self.keep_idx, axis=1)
         else:
             x_out, x_rest = None, x2
-        y = jnp.zeros((x2.shape[0], self.c), jnp.float32)
+        y = jnp.zeros((x2.shape[0], c), jnp.float32)
         if self.mean_col is not None:
             y = y + (x_rest @ self.mean_col.astype(jnp.float32))[:, None]
         from repro.kernels.qmatmul import ops as qops  # late: avoid cycle
@@ -81,7 +87,7 @@ class QuantizedLinear:
                                           bits=self.bits, d=self.d_keep)
         if x_out is not None:
             y = y + x_out @ self.w_out.astype(jnp.float32)
-        return y.reshape(*lead, self.c)
+        return y.reshape(*lead, c)
 
 
 def quantize_linear(w: jax.Array, bits: int, key: jax.Array,

@@ -15,6 +15,13 @@ in one process can hold opposite settings without racing); outside any
 scope the backend decides (kernel on TPU, gather elsewhere — interpret-mode
 Pallas is pointlessly slow as a CPU default).  ``set_forced_path`` is the
 test override that bypasses both.
+
+Like the qmatmul dispatch, head counts come from the operands: under tensor
+parallelism (DESIGN.md §11) the call sites sit inside ``shard_map``, so q
+carries n_heads/tp query heads and the arena KV/tp KV heads per shard.  The
+GQA group ratio (q heads per KV head) is preserved by the all-or-nothing
+attention sharding predicate, so kernel and gather paths both work
+unchanged on a shard — they just see a narrower head axis.
 """
 from __future__ import annotations
 

@@ -16,6 +16,14 @@ for A/B benchmarking (benchmarks/serve_bench.py reports both); it is backed by
 a ``contextvars.ContextVar`` so a serving engine and a benchmark running in
 the same process cannot race each other's toggles the way a mutable module
 global could.
+
+Shapes are taken from the operands, never from a config: under tensor
+parallelism (DESIGN.md §11) these entry points run *inside* ``shard_map``
+blocks, where the packed codes / rescale / w_out carry per-shard column
+counts (c/tp of the full layer).  Every column's estimator (Alg. 3) depends
+only on that column's codes and side info plus the full rotated activation,
+so a shard computes exactly the columns it owns and the dispatch needs no
+TP awareness at all.
 """
 from __future__ import annotations
 

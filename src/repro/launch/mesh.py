@@ -22,7 +22,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever this host actually has (smoke tests: 1 CPU device)."""
+def make_host_mesh(tp: int = 1):
+    """Whatever this host actually has (smoke tests: 1 CPU device), split
+    ``(n // tp, tp)`` over ``("data", "model")``.  ``tp > 1`` is how tests
+    and the serving CLI build a real host TP mesh (typically under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
     n = len(jax.devices())
-    return _make_mesh((n, 1), ("data", "model"))
+    if tp < 1 or n % tp:
+        raise ValueError(
+            f"tp={tp} must be >= 1 and divide the host device count ({n})")
+    return _make_mesh((n // tp, tp), ("data", "model"))

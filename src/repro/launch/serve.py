@@ -21,6 +21,11 @@ self-speculative decoding: the same weights are quantized a second time at
 the target quantization) and the engine runs draft-propose/target-verify
 rounds — greedy outputs stay token-identical, and the printed
 ``acceptance_rate`` tracks how many draft tokens survive verification.
+``--tp N`` serves tensor-parallel over a ``(data, model)`` mesh
+(DESIGN.md §11): quantized columns, attention heads, and the KV arena
+shard over N chips and greedy outputs stay token-identical to ``--tp 1``;
+on CPU, force devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --tiny \
       --avg-bits 3.3 --requests 8 --gen 32
@@ -127,9 +132,17 @@ def main():
     ap.add_argument("--draft-bits", type=float, default=2.2,
                     help="average bit budget for the speculative draft "
                          "quantization (used when --speculate > 0)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: serve over a "
+                         "(data, model) mesh with this many chips on the "
+                         "model axis (paged engine; must divide the device "
+                         "count — on CPU force devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
     args = ap.parse_args()
     if args.speculate and args.lockstep:
         ap.error("--speculate needs the paged engine (drop --lockstep)")
+    if args.tp > 1 and args.lockstep:
+        ap.error("--tp needs the paged engine (drop --lockstep)")
 
     cfg = get_tiny(args.arch) if args.tiny else get_config(args.arch)
     key = jax.random.PRNGKey(0)
@@ -183,19 +196,23 @@ def main():
                           prefix_cache=args.prefix_cache,
                           kv_dtype=(jnp.bfloat16 if args.kv_dtype == "bf16"
                                     else jnp.float32))
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(tp=args.tp) if args.tp > 1 else None
         engine = PagedServer(cfg, params, pool, fused=not args.unfused,
                              paged_kernel=args.paged_kernel,
                              draft_params=draft_params,
-                             speculate=args.speculate)
+                             speculate=args.speculate, mesh=mesh)
         results = engine.run([Request(rid=i, prompt=np.asarray(prompt),
                                       max_new=args.gen)
                               for i in range(args.requests)])
         sample = results[0].tokens
         with pops.paged_kernel(args.paged_kernel):
             attn_path = "kernel" if pops.kernel_enabled() else "gather"
+        m = engine.mesh.shape
         extra = (f"paged, occupancy={engine.stats['mean_occupancy']:.2f}, "
                  f"decode_traces={engine.decode_trace_count}, "
-                 f"attn={attn_path}")
+                 f"attn={attn_path}, "
+                 f"mesh={m['data']}x{m['model']}, tp={engine.tp}")
         if engine.speculate:
             extra += (f", speculate={engine.speculate}, acceptance_rate="
                       f"{engine.stats['acceptance_rate']:.2f}")

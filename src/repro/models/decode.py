@@ -26,6 +26,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.runtime import tp as tpmod
+
 from . import attention as attnmod
 from . import mla as mlamod
 from . import rglru as rglrumod
@@ -98,13 +100,17 @@ def _attn_qkv(cfg: ModelConfig, p: dict, hn: jax.Array, positions):
 
     hn (B, S, d); positions (B, S), or (3, B, S) for mrope.  Used by every
     serving path (prefill, decode, and their paged variants) so positional
-    handling can't drift between them.
+    handling can't drift between them.  Head counts are derived from the
+    projection outputs, not ``cfg``: under tensor-parallel serving
+    (runtime/tp.py) ``wq``/``wk``/``wv`` arrive column-sharded inside
+    ``shard_map`` and each shard sees its local head slice; rope/qk-norm
+    are per-head so they apply to the slice unchanged.
     """
     b, s, _ = hn.shape
-    hq, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
-    q = linear(p["wq"], hn).reshape(b, s, hq, hd)
-    k = linear(p["wk"], hn).reshape(b, s, kv, hd)
-    v = linear(p["wv"], hn).reshape(b, s, kv, hd)
+    hd = cfg.hd
+    q = linear(p["wq"], hn).reshape(b, s, -1, hd)
+    k = linear(p["wk"], hn).reshape(b, s, -1, hd)
+    v = linear(p["wv"], hn).reshape(b, s, -1, hd)
     q, k = _qk_normalize(p, q, k)
     if cfg.pos == "rope":
         q = apply_rope(q, positions, cfg.rope_theta)
@@ -383,7 +389,8 @@ def layer_decode_paged(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
         out = attnmod.paged_decode_attention(q, k_arena, v_arena, block_tables,
                                              pos + 1, ring_cap,
                                              window=cfg.window)
-        mix = linear(p["wo"], out.reshape(b, 1, cfg.n_heads * cfg.hd))
+        out = tpmod.gather_heads(out, cfg.n_heads)
+        mix = linear(p["wo"], out.reshape(b, 1, -1))
         new_cache["k"], new_cache["v"] = k_arena, v_arena
     elif mixer == "mla":
         mix, mc = mlamod.mla_decode_paged(lp["mla"], hn, cfg.mla,
@@ -440,7 +447,7 @@ def decode_step_paged(cfg: ModelConfig, params: dict, caches: list,
 
     h, new_caches = _apply_layers(cfg, params, caches, h, fn, scan)
     h = apply_norm(cfg.norm, h, params["final_norm"])
-    logits = linear(params["lm_head"], h)
+    logits = tpmod.gather_cols(linear(params["lm_head"], h), cfg.vocab)
     return logits[:, 0], new_caches
 
 
@@ -500,7 +507,8 @@ def layer_verify_paged(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
         out = attnmod.paged_prefill_attention(q, k_hist, v_hist, hist_pos,
                                               k, v, positions,
                                               window=cfg.window)
-    mix = linear(p["wo"], out.reshape(b, w, cfg.n_heads * cfg.hd))
+    out = tpmod.gather_heads(out, cfg.n_heads)
+    mix = linear(p["wo"], out.reshape(b, w, -1))
     h = h + mix.astype(h.dtype)
     h2 = apply_norm(cfg.norm, h, lp["ln2"])
     y, _ = _ffn_apply(cfg, lp, h2, None, "ver")
@@ -541,7 +549,7 @@ def decode_verify_paged(cfg: ModelConfig, params: dict, caches: list,
 
     h, new_caches = _apply_layers(cfg, params, caches, h, fn, scan)
     h = apply_norm(cfg.norm, h, params["final_norm"])
-    logits = linear(params["lm_head"], h)
+    logits = tpmod.gather_cols(linear(params["lm_head"], h), cfg.vocab)
     return logits, new_caches
 
 
@@ -582,7 +590,8 @@ def layer_prefill_chunk(cfg: ModelConfig, mixer: str, lp: dict, h: jax.Array,
         out = attnmod.paged_prefill_attention(
             q, k_hist, v_hist, hist_pos, k, v, chunk_pos[None],
             window=cfg.window)
-        mix = linear(p["wo"], out.reshape(b, c, cfg.n_heads * cfg.hd))
+        out = tpmod.gather_heads(out, cfg.n_heads)
+        mix = linear(p["wo"], out.reshape(b, c, -1))
         block_size = cache["k"].shape[1]
         pb, off = attnmod.paged_write_indices(chunk_pos, ring_cap, bt_row,
                                               block_size)
@@ -645,7 +654,7 @@ def prefill_chunk_paged(cfg: ModelConfig, params: dict, caches: list,
 
     h, new_caches = _apply_layers(cfg, params, caches, h, fn, scan)
     h = apply_norm(cfg.norm, h, params["final_norm"])
-    logits = linear(params["lm_head"], h[:, -1])
+    logits = tpmod.gather_cols(linear(params["lm_head"], h[:, -1]), cfg.vocab)
     return logits, new_caches
 
 

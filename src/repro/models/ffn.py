@@ -1,10 +1,18 @@
 """Feed-forward blocks: fused-gate SwiGLU/GeGLU, plain GELU (whisper),
-and the RWKV channel-mix (lives in rwkv6.py)."""
+and the RWKV channel-mix (lives in rwkv6.py).
+
+Under tensor-parallel serving (runtime/tp.py) ``wi`` arrives column-sharded
+inside ``shard_map`` (gate|up interleaved per shard so the local split is
+correct) while ``wo`` stays replicated; ``gather_cols`` reassembles the full
+hidden width before the down-projection and is a shape-driven no-op on the
+unsharded / TP=1 path.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.tp import gather_cols, in_dim
 from .common import LinearCtx, linear
 
 
@@ -14,11 +22,13 @@ def glu_ffn(p: dict, x: jax.Array, act: str = "silu",
     gu = linear(p["wi"], x, ctx, f"{name}.wi")
     gate, up = jnp.split(gu, 2, axis=-1)
     g = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
-    return linear(p["wo"], g * up, ctx, f"{name}.wo")
+    h = gather_cols(g * up, in_dim(p["wo"]))
+    return linear(p["wo"], h, ctx, f"{name}.wo")
 
 
 def gelu_ffn(p: dict, x: jax.Array, ctx: LinearCtx | None = None,
              name: str = "mlp") -> jax.Array:
     """Plain 2-matrix GELU MLP (whisper)."""
     h = jax.nn.gelu(linear(p["wi"], x, ctx, f"{name}.wi"))
+    h = gather_cols(h, in_dim(p["wo"]))
     return linear(p["wo"], h, ctx, f"{name}.wo")

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.qlinear import QuantizedGrouped
+from repro.runtime.tp import gather_cols
 from .common import LinearCtx, linear
 
 
@@ -89,6 +90,9 @@ def moe_ffn(p: dict, x: jax.Array, *, n_experts: int, top_k: int,
     gu = _expert_matmul(p["wi"], xbuf, ctx, f"{name}.wi")
     gate_h, up = jnp.split(gu, 2, axis=-1)
     h = (jax.nn.silu(gate_h) if act == "silu" else jax.nn.gelu(gate_h)) * up
+    # TP (runtime/tp.py): wi is column-sharded per expert, wo replicated —
+    # reassemble the full expert hidden width (no-op when unsharded).
+    h = gather_cols(h, p["wo"].shape[1])
     ybuf = _expert_matmul(p["wo"], h, ctx, f"{name}.wo")                 # (E, C, d)
 
     # --- combine ---
@@ -102,5 +106,6 @@ def moe_ffn(p: dict, x: jax.Array, *, n_experts: int, top_k: int,
         gu_s = linear(p["swi"], xf, ctx, f"{name}.swi")
         gsh, ush = jnp.split(gu_s, 2, axis=-1)
         hs = (jax.nn.silu(gsh) if act == "silu" else jax.nn.gelu(gsh)) * ush
+        hs = gather_cols(hs, p["swo"].shape[0])
         y = y + linear(p["swo"], hs, ctx, f"{name}.swo")
     return y.reshape(b, s, d), aux

@@ -53,6 +53,7 @@ from repro.kernels.paged_attention import ops as pops
 from repro.kernels.qmatmul import ops as qops
 from repro.models import decode as decmod
 from repro.models.config import ModelConfig
+from repro.runtime import tp as tpmod
 
 from .pool import (BlockAllocator, PoolConfig, PrefixCache, init_pool_caches,
                    request_blocks)
@@ -168,13 +169,23 @@ class PagedServer:
     speculation and run the plain decode loop.  Construct once per (model,
     PoolConfig) — all serving state (arenas, allocator, queues, stats)
     lives on the instance, and ``run`` drains a workload to completion.
+
+    ``mesh`` (a ``("data", "model")`` mesh, e.g. from
+    ``launch.mesh.make_host_mesh(tp=2)``) turns on tensor-parallel serving
+    (DESIGN.md §11): params are column-shard-placed per ``runtime.tp``'s
+    plan, the KV block arenas shard their head axis, and every jitted step
+    runs inside one ``shard_map`` over the mesh.  Default is the trivial
+    (1, 1) mesh — single-device serving is the TP=1 special case of the
+    same code path, not a separate one.  Scheduler/allocator/prefix-cache
+    state stays host-side and replicated regardless of TP degree.
     """
 
     def __init__(self, cfg: ModelConfig, params: dict,
                  pool: PoolConfig | None = None, *, fused: bool = True,
                  paged_kernel: bool | None = None,
                  temperature: float = 0.0, seed: int = 0,
-                 draft_params: dict | None = None, speculate: int = 0):
+                 draft_params: dict | None = None, speculate: int = 0,
+                 mesh=None):
         if cfg.enc_dec:
             raise ValueError(
                 "PagedServer does not support encoder-decoder archs")
@@ -184,7 +195,11 @@ class PagedServer:
             raise ValueError("speculate > 0 requires draft_params "
                              "(see core.pipeline.quantize_model_dual)")
         self.cfg = cfg
-        self.params = params
+        self.mesh = mesh if mesh is not None else tpmod.default_mesh()
+        self.tp = int(self.mesh.shape[tpmod.AXIS])
+        self.tp_plan = tpmod.plan_for(cfg, self.tp)
+        self.params, self._pspecs = tpmod.prepare_params(cfg, params,
+                                                         self.mesh)
         self.pool = pool or PoolConfig()
         self.fused = fused
         self.paged_kernel = paged_kernel
@@ -197,16 +212,27 @@ class PagedServer:
         self.speculating = bool(speculate) and all(
             mx == "attn" for mx in cfg.pattern)
         self.speculate = speculate if self.speculating else 0
-        self.draft_params = draft_params if self.speculating else None
+        if self.speculating:
+            self.draft_params, self._draft_pspecs = tpmod.prepare_params(
+                cfg, draft_params, self.mesh)
+        else:
+            self.draft_params, self._draft_pspecs = None, None
         if self.speculating and self.pool.lookahead < speculate:
             # verify/draft steps write up to `speculate` positions past the
             # accepted frontier; reserve ring capacity so those writes can
             # never wrap onto live history (window or prompt)
             self.pool = dataclasses.replace(self.pool, lookahead=speculate)
+        # KV arenas shard their head axis when the plan shards attention;
+        # recurrent/MLA slot state replicates (runtime/tp.py).
         self.caches = init_pool_caches(cfg, params, self.pool)
-        self.draft_caches = (init_pool_caches(cfg, self.draft_params,
-                                              self.pool)
-                             if self.speculating else None)
+        self._cspecs = tpmod.cache_spec_list(self.caches, self.mesh,
+                                             self.tp_plan)
+        self.caches = tpmod.place(self.caches, self._cspecs, self.mesh)
+        if self.speculating:
+            dc = init_pool_caches(cfg, draft_params, self.pool)
+            self.draft_caches = tpmod.place(dc, self._cspecs, self.mesh)
+        else:
+            self.draft_caches = None
         # Prefix caching needs blocks that are immutable once written:
         # pure-attention archs without a sliding window.  Windowed archs
         # ring-reuse their blocks in place, and recurrent/MLA state lives in
@@ -233,33 +259,60 @@ class PagedServer:
         # Caches are donated: the pool buffers alias input->output instead of
         # being copied every step (same pattern as launch/dryrun.py).  jit's
         # own shape cache handles the few distinct prefill chunk lengths.
+        # Every step runs inside ONE shard_map over the engine mesh
+        # (runtime/tp.sharded_call): params/caches enter under their
+        # placement specs, step arguments and logits replicate, and cache
+        # in/out specs match so donation survives the wrapper.  The draft
+        # steps get their own wrappers because the draft quantization has
+        # its own param spec list.
+        def _wrap(core, pspecs):
+            return tpmod.sharded_call(core, self.mesh, pspecs, self._cspecs)
+
+        step_core = _wrap(
+            lambda p_, c_, *a: decmod.decode_step_paged(cfg, p_, c_, *a),
+            self._pspecs)
+        chunk_core = _wrap(
+            lambda p_, c_, *a: decmod.prefill_chunk_paged(cfg, p_, c_, *a),
+            self._pspecs)
+        verify_core = _wrap(
+            lambda p_, c_, *a: decmod.decode_verify_paged(cfg, p_, c_, *a),
+            self._pspecs)
+        if self.speculating:
+            draft_step_core = _wrap(
+                lambda p_, c_, *a: decmod.decode_step_paged(cfg, p_, c_, *a),
+                self._draft_pspecs)
+            draft_verify_core = _wrap(
+                lambda p_, c_, *a: decmod.decode_verify_paged(cfg, p_, c_,
+                                                              *a),
+                self._draft_pspecs)
+
         def _step(params_, caches, tokens, pos, active, bts, ring):
             self.decode_trace_count += 1      # trace-time side effect only
-            return decmod.decode_step_paged(cfg, params_, caches, tokens,
-                                            pos, active, bts, ring)
+            return step_core(params_, caches, tokens, pos, active, bts, ring)
 
         def _draft_step(params_, caches, tokens, pos, active, bts, ring):
             self.draft_trace_count += 1       # trace-time side effect only
-            return decmod.decode_step_paged(cfg, params_, caches, tokens,
-                                            pos, active, bts, ring)
+            return draft_step_core(params_, caches, tokens, pos, active,
+                                   bts, ring)
 
         def _chunk(params_, caches, toks, pos0, slot, bt, ring):
-            return decmod.prefill_chunk_paged(cfg, params_, caches, toks,
-                                              pos0, slot, bt, ring)
+            return chunk_core(params_, caches, toks, pos0, slot, bt, ring)
 
         def _verify(params_, caches, tokens, pos0, active, bts, ring, wmask):
             self.verify_trace_count += 1      # trace-time side effect only
-            return decmod.decode_verify_paged(cfg, params_, caches, tokens,
-                                              pos0, active, bts, ring, wmask)
+            return verify_core(params_, caches, tokens, pos0, active, bts,
+                               ring, wmask)
 
         def _catchup(params_, caches, tokens, pos0, active, bts, ring, wmask):
             self.catchup_trace_count += 1     # trace-time side effect only
-            return decmod.decode_verify_paged(cfg, params_, caches, tokens,
-                                              pos0, active, bts, ring, wmask)
+            return draft_verify_core(params_, caches, tokens, pos0, active,
+                                     bts, ring, wmask)
 
-        def _cow(caches, src, dst):
+        def _cow_core(caches, src, dst):
             # clone one physical block's KV across every layer arena
             return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), caches)
+
+        _cow = tpmod.sharded_cache_op(_cow_core, self.mesh, self._cspecs)
 
         self._step = jax.jit(_step, donate_argnums=(1,))
         self._draft_step = jax.jit(_draft_step, donate_argnums=(1,))

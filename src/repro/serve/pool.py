@@ -27,6 +27,15 @@ reusable) only when an allocation cannot be met from the free list.  The
 cache itself is content-addressed: full blocks are keyed by a hash chain
 over (parent_hash, block_tokens), so a lookup walks the prompt block by
 block and two requests sharing a prompt prefix share physical blocks.
+
+Tensor parallelism (DESIGN.md §11): the arena's device placement is the
+engine's business, not the pool's — under ``--tp N`` the KV-head axis of
+every attention arena is sharded over the mesh's ``"model"`` axis while
+*all host-side pool state here* (block tables, ``BlockAllocator`` refcounts
+and free list, ``PrefixCache`` hash chain, per-slot positions) stays
+replicated python state: block ids are device-agnostic, so one allocator
+decision drives every shard identically and the prefix cache never needs
+to know the arena is distributed.
 """
 from __future__ import annotations
 

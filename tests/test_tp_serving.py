@@ -1,0 +1,260 @@
+"""Tensor-parallel serving (runtime/tp.py, DESIGN.md §11).
+
+The correctness bar is exact: every sharded weight is column-sharded and
+the TP boundary is an all_gather of disjoint slices (never a psum of
+partial products), so each output column is computed by exactly one shard
+with the same float ops as the single-device engine — greedy outputs must
+be *token-identical* at TP=2 vs TP=1, and the mesh-aware decode step must
+still trace exactly once under request churn.
+
+TP=2 needs two devices, and ``--xla_force_host_platform_device_count``
+must be set before jax initializes — the pytest process already holds a
+1-device jax, so every TP scenario runs in a fresh subprocess (the
+``_DRIVER`` script below) that forces a 2-device host, runs both engines,
+and reports mismatches / trace counts / plan flags / arena shardings as
+JSON.  In-process tests cover what doesn't need a second device: mesh
+validation, the TP plan predicates, the gate|up interleaving permutation,
+and the shape-driven no-op of the gather helpers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.runtime import tp as tpmod
+
+_ROOT = Path(__file__).resolve().parent.parent
+
+
+# ----------------------------------------------------- in-process (tier1)
+
+
+def test_make_host_mesh_validates_tp():
+    """tp must divide the device count (1 on the plain test host)."""
+    from repro.launch.mesh import make_host_mesh
+    m = make_host_mesh()                       # tp=1 always works
+    assert m.shape["model"] == 1
+    with pytest.raises(ValueError):
+        make_host_mesh(tp=0)
+    with pytest.raises(ValueError):
+        make_host_mesh(tp=2)                   # 1 host device
+
+
+def test_plan_predicates():
+    """Divisibility decides what shards; attention is all-or-nothing in
+    (n_heads, n_kv) so the GQA group ratio matches the sharded arena."""
+    llama = registry.get_tiny("llama2-7b")     # heads 4, kv 4, ff 384
+    p = tpmod.plan_for(llama, 2)
+    assert p.attn and p.ffn and p.lm_head and not p.moe
+    yi = registry.get_tiny("yi-34b")           # heads 7, kv 1 -> replicate
+    p = tpmod.plan_for(yi, 2)
+    assert not p.attn and p.ffn
+    mix = registry.get_tiny("mixtral-8x7b")    # moe: expert columns shard
+    p = tpmod.plan_for(mix, 2)
+    assert p.attn and p.moe and not p.ffn
+    # TP=1 is the degenerate plan: nothing shards
+    assert not any([f for k, f in tpmod.plan_for(llama, 1).asdict().items()
+                    if k != "tp"])
+
+
+def test_glu_perm_interleaves_gate_up():
+    """The placement permutation must put [gate_i | up_i] contiguously per
+    shard so the local split(gu, 2) is correct and the gathered hidden
+    state lands back in natural column order."""
+    two_f, tp = 24, 2
+    perm = tpmod._glu_perm(two_f, tp)
+    f, fl = two_f // 2, two_f // 2 // tp
+    assert sorted(perm.tolist()) == list(range(two_f))
+    for i in range(tp):
+        shard = perm[i * 2 * fl:(i + 1) * 2 * fl]
+        # first half of the shard = gate columns, second half = up columns,
+        # both the i-th contiguous slice of the full gate/up ranges
+        assert shard[:fl].tolist() == list(range(i * fl, (i + 1) * fl))
+        assert shard[fl:].tolist() == list(range(f + i * fl, f + (i + 1) * fl))
+
+
+def test_gather_helpers_are_shape_driven_noops():
+    """At full width the helpers return their input unchanged — no axis
+    name needed — which is exactly why TP=1 shares the sharded code path."""
+    x = np.zeros((3, 1, 4, 8), np.float32)
+    assert tpmod.gather_heads(x, 4) is x
+    y = np.zeros((3, 16), np.float32)
+    assert tpmod.gather_cols(y, 16) is y
+
+
+# ----------------------------------------- subprocess scenarios (2 devices)
+
+_DRIVER = r"""
+import json, sys
+import jax, jax.numpy as jnp, numpy as np
+from helpers import (tiny_model, small_pool, mixed_requests,
+                     shared_prefix_requests)
+from repro.launch.mesh import make_host_mesh
+from repro.serve import PagedServer
+
+def quantized(cfg, params, dual=False):
+    from repro.core import calibrate as cal
+    from repro.core import pipeline as pipe
+    from repro.models import transformer as tf
+    toks = cal.zero_shot_tokens(cfg.vocab, 32)
+    stats = cal.calibrate(
+        lambda p, b, ctx: tf.loss_fn(cfg, p, b, ctx=ctx, scan=False),
+        params, [{"tokens": jnp.asarray(toks)}])
+    if dual:
+        tq, _, dq, _ = pipe.quantize_model_dual(
+            cfg, params, stats, 4.0, 2.2, jax.random.PRNGKey(1),
+            bit_choices=(1, 2, 3, 4, 5), n_candidates=2)
+        return tq, dq
+    q, _ = pipe.quantize_model(cfg, params, stats, 4.0, jax.random.PRNGKey(1),
+                               bit_choices=(2, 3, 4, 5), n_candidates=2)
+    return q, None
+
+def run(scenario):
+    arch = dict(llama2="llama2-7b", llama2_quant="llama2-7b",
+                prefix="llama2-7b", speculative="llama2-7b",
+                mixtral="mixtral-8x7b", gqa="llama3.2-3b",
+                gqa_kernel="llama3.2-3b", yi="yi-34b")[scenario]
+    cfg, params = tiny_model(arch)
+    kw, pool, reqs_fn = {}, small_pool(), mixed_requests
+    if scenario in ("llama2_quant", "prefix"):
+        params, _ = quantized(cfg, params)
+    if scenario == "prefix":
+        pool = small_pool(prefix_cache=True)
+        reqs_fn = shared_prefix_requests
+    if scenario == "speculative":
+        params, draft = quantized(cfg, params, dual=True)
+        kw = dict(draft_params=draft, speculate=2)
+    if scenario == "gqa_kernel":
+        kw = dict(paged_kernel=True)
+    reqs = reqs_fn(cfg)
+    e1 = PagedServer(cfg, params, pool, **kw)
+    r1 = e1.run(list(reqs))
+    e2 = PagedServer(cfg, params, pool, mesh=make_host_mesh(tp=2), **kw)
+    r2 = e2.run(list(reqs))
+    arena = next((l for l in jax.tree.leaves(e2.caches)
+                  if getattr(l, "ndim", 0) == 5), None)
+    return {
+        "devices": len(jax.devices()),
+        "mismatches": sum(1 for k in r1
+                          if r1[k].tokens.tolist() != r2[k].tokens.tolist()),
+        "n_results": len(r1),
+        "decode_traces_tp2": e2.decode_trace_count,
+        "verify_traces_tp2": e2.verify_trace_count,
+        "plan": e2.tp_plan.asdict(),
+        "arena_spec": "" if arena is None else str(arena.sharding.spec),
+        "prefix_hit_rate_tp2": e2.stats.get("prefix_hit_rate", -1.0),
+        "acceptance_tp1": e1.stats.get("acceptance_rate", -1.0),
+        "acceptance_tp2": e2.stats.get("acceptance_rate", -1.0),
+    }
+
+print(json.dumps(run(sys.argv[1])))
+"""
+
+
+def _run_tp_scenario(scenario: str) -> dict:
+    env = dict(os.environ)
+    # Scrub any inherited device-count flag first (importing launch.dryrun
+    # anywhere in the pytest process exports a 512-device XLA_FLAGS into
+    # os.environ, and with duplicate flags the last one wins).
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = (inherited
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(_ROOT / "src"), str(_ROOT / "tests"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run([sys.executable, "-c", _DRIVER, scenario],
+                          capture_output=True, text=True, env=env,
+                          cwd=str(_ROOT), timeout=900)
+    assert proc.returncode == 0, f"{scenario} driver failed:\n{proc.stderr}"
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 2
+    assert out["n_results"] > 0
+    return out
+
+
+def test_tp2_parity_llama2_and_trace_count():
+    """The acceptance bar: TP=2 greedy outputs token-identical to TP=1 on
+    the churn workload, everything sharded, ONE decode trace."""
+    out = _run_tp_scenario("llama2")
+    assert out["mismatches"] == 0
+    assert out["decode_traces_tp2"] == 1
+    assert out["plan"] == dict(tp=2, attn=True, ffn=True, moe=False,
+                               shared=False, lm_head=True)
+    assert "model" in out["arena_spec"]        # KV arena head axis sharded
+
+
+@pytest.mark.tier2
+def test_tp2_parity_llama2_quantized():
+    """Sharding the *quantized* artifact (packed codes + side info sliced
+    by column) is the distinctive part — parity must hold there too."""
+    out = _run_tp_scenario("llama2_quant")
+    assert out["mismatches"] == 0
+    assert out["decode_traces_tp2"] == 1
+
+
+@pytest.mark.tier2
+def test_tp2_parity_mixtral_windowed_moe():
+    """Windowed attention + MoE: expert columns shard, dense-ffn flag off,
+    ring-buffered arena still sharded by KV head."""
+    out = _run_tp_scenario("mixtral")
+    assert out["mismatches"] == 0
+    assert out["decode_traces_tp2"] == 1
+    assert out["plan"]["moe"] and not out["plan"]["ffn"]
+    assert "model" in out["arena_spec"]
+
+
+@pytest.mark.tier2
+def test_tp2_parity_gqa():
+    """GQA (6 heads / 2 KV heads): the group ratio must stay consistent
+    between the sharded q heads and the sharded arena."""
+    out = _run_tp_scenario("gqa")
+    assert out["mismatches"] == 0
+    assert out["plan"]["attn"]
+
+
+@pytest.mark.tier2
+def test_tp2_parity_gqa_pallas_kernel():
+    """The Pallas flash-decode kernel runs per-shard over the sharded
+    arena (interpret mode on CPU) and must agree with TP=1."""
+    out = _run_tp_scenario("gqa_kernel")
+    assert out["mismatches"] == 0
+
+
+@pytest.mark.tier2
+def test_tp2_nondivisible_heads_degrade_to_replication():
+    """yi-style head counts (7 heads, 1 KV head) don't divide: attention
+    replicates (arena included) while the FFN still shards — and parity
+    holds through the mixed plan."""
+    out = _run_tp_scenario("yi")
+    assert out["mismatches"] == 0
+    assert not out["plan"]["attn"] and out["plan"]["ffn"]
+    assert "model" not in out["arena_spec"]    # replicated arena
+
+
+@pytest.mark.tier2
+def test_tp2_prefix_cache_parity():
+    """Prefix caching is host-side replicated state; hits/COW must not
+    perturb sharded outputs, and the hit rate must survive TP."""
+    out = _run_tp_scenario("prefix")
+    assert out["mismatches"] == 0
+    assert out["prefix_hit_rate_tp2"] > 0.0
+
+
+@pytest.mark.tier2
+def test_tp2_speculative_parity():
+    """Greedy self-speculative decoding on the sharded engine: emitted
+    tokens are target argmaxes, so TP=2 must be token-identical, with a
+    sane acceptance rate on both engines."""
+    out = _run_tp_scenario("speculative")
+    assert out["mismatches"] == 0
+    assert 0.0 <= out["acceptance_tp2"] <= 1.0
+    assert out["acceptance_tp1"] == pytest.approx(out["acceptance_tp2"])

@@ -36,6 +36,16 @@ must be token-identical (recorded as ``token_mismatches``).  Skipped with
 a reason when the host has fewer than 2 devices (force them on CPU with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=2``).
 
+Part 7 — front-door scheduling (DESIGN.md §12): a bursty two-tenant
+workload (a low-priority batch tenant saturating the pool at t=0, a
+high-priority chat tenant arriving in bursts) served through the
+``Scheduler`` with the SLO controller off vs on.  The chat bursts force
+drop-and-replay preemptions of batch requests; the leg records per-tenant
+latency p50/p95, decode-gap p50/p95 (the per-token latency the SLO
+controller regulates), preemption counts, and greedy parity vs a plain
+``engine.run`` of the same requests — preempted-and-replayed outputs must
+be token-identical (``token_mismatches``).
+
 Every leg emits the same accounting triple — ``token_mismatches`` (greedy
 parity vs its reference leg), ``interpret_mode``, ``device_kind`` — and
 everything lands in ``BENCH_serve.json`` so the serving perf trajectory is
@@ -93,6 +103,71 @@ def _shared_prefix_workload(cfg, corpus, n=8, sys_len=48, tail=8, seed=11):
         reqs.append(Request(rid=i, prompt=prompt,
                             max_new=int(rng.integers(4, 13)), arrival=t))
     return reqs
+
+
+def _bursty_two_tenant(cfg, corpus, seed=17):
+    """Low-priority batch tenant saturates the pool at t=0 with long
+    generations; a high-priority chat tenant arrives in two bursts of
+    long-prompt short-gen requests.  The bursts land on a full pool, so
+    serving chat promptly requires preempting batch work, and chat's
+    chunked prefills are what inflate decode gaps for the SLO controller
+    to push back on."""
+    rng = np.random.default_rng(seed)
+    reqs, rid = [], 0
+    for _ in range(6):                       # batch: fills 4 slots + queue
+        start = int(rng.integers(0, len(corpus) - 16))
+        reqs.append(Request(rid=rid, max_new=96, arrival=0.0,
+                            prompt=np.asarray(corpus[start:start + 16],
+                                              np.int32),
+                            tenant="batch", priority=0))
+        rid += 1
+    for i in range(6):                       # chat: two bursts of three
+        start = int(rng.integers(0, len(corpus) - 48))
+        reqs.append(Request(rid=rid, max_new=8,
+                            arrival=0.1 + (i // 3) * 0.3 + (i % 3) * 0.02,
+                            prompt=np.asarray(corpus[start:start + 48],
+                                              np.int32),
+                            tenant="chat", priority=5))
+        rid += 1
+    return reqs
+
+
+def _sched_serve(cfg, params, reqs, slo_p95_ms):
+    """Serve ``reqs`` through the front-door Scheduler (SLO controller on
+    when ``slo_p95_ms`` is set): per-tenant latencies, decode gaps, and
+    scheduler counters.  Compile caches are warmed for every prefill-chunk
+    length 1..chunk first — replayed prefills of preempted requests land on
+    arbitrary remainder lengths, and a mid-leg XLA compile would swamp the
+    decode-gap signal the leg exists to measure."""
+    from repro.serve.frontdoor import SchedConfig, Scheduler
+    pool = PoolConfig(max_slots=MAX_SLOTS, block_size=8,
+                      max_context=max(len(r.prompt) + r.max_new
+                                      for r in reqs),
+                      prefill_chunk=16, prefix_cache=True)
+    engine = PagedServer(cfg, params, pool)
+    engine.run([Request(rid=-1 - c, prompt=np.zeros(c, np.int32), max_new=2)
+                for c in range(1, pool.prefill_chunk + 1)])
+    engine.stats.clear()
+    engine.decode_gaps.clear()
+    engine.start_clock(reset=True)   # arrivals count from here, not warmup
+    sched = Scheduler(engine, SchedConfig(slo_p95_ms=slo_p95_ms))
+    for r in reqs:
+        sched.submit(r)
+    results = {}
+    t0 = time.time()
+    while sched.has_work() and time.time() - t0 < 300:
+        results.update(sched.tick())
+    wall = time.time() - t0
+    lats, ttfts = {}, {}
+    for r in reqs:
+        lats.setdefault(r.tenant, []).append(results[r.rid].t_done
+                                             - r.arrival)
+        ttfts.setdefault(r.tenant, []).append(results[r.rid].ttft_s)
+    return {"wall": wall, "lats": lats, "ttfts": ttfts,
+            "gaps": np.asarray(engine.decode_gaps, np.float64),
+            "sched_stats": dict(sched.stats), "engine_stats": engine.stats,
+            "results": results,
+            "toks": sum(len(v.tokens) for v in results.values())}
 
 
 def _spec_workload(cfg, corpus, n=4, plen=12, gen=24, seed=13):
@@ -236,6 +311,7 @@ def run(row: Row, gen: int = 16, requests: int = 4):
     ref_outputs = None   # poisson_paged_fused outputs, set on the first leg
     for mode in ("paged", "lockstep"):
         for fused in (True, False):
+            ttfts = None
             if mode == "paged":
                 res = _paged_serve(cfg, qp, reqs, fused)
                 if fused:
@@ -243,6 +319,7 @@ def run(row: Row, gen: int = 16, requests: int = 4):
                 wall, toks, lat, estats, results = res
                 occ = estats["mean_occupancy"]
                 outputs = {rid: r.tokens for rid, r in results.items()}
+                ttfts = [results[r.rid].ttft_s for r in reqs]
             else:
                 wall, toks, lat, occ, outputs = _lockstep_serve(
                     cfg, qp, reqs, fused)
@@ -250,10 +327,13 @@ def run(row: Row, gen: int = 16, requests: int = 4):
                 ref_outputs = outputs
             mism = _mismatches(outputs, ref_outputs)
             fl = "fused" if fused else "unfused"
+            ttft_note = ("" if ttfts is None else
+                         f"ttft_p50_s={np.percentile(ttfts, 50):.2f};"
+                         f"ttft_p95_s={np.percentile(ttfts, 95):.2f};")
             row.add(f"serve/poisson_{mode}_{fl}", wall / max(toks, 1) * 1e6,
                     f"tok_s={toks/wall:.1f};p50_s={np.percentile(lat, 50):.2f};"
                     f"p95_s={np.percentile(lat, 95):.2f};occupancy={occ:.2f};"
-                    f"token_mismatches={mism}")
+                    f"{ttft_note}token_mismatches={mism}")
             bench_json["workloads"][f"poisson_{mode}_{fl}"] = {
                 "tok_s": toks / wall,
                 "p50_s": float(np.percentile(lat, 50)),
@@ -262,6 +342,10 @@ def run(row: Row, gen: int = 16, requests: int = 4):
                 "token_mismatches": mism,
                 "interpret_mode": False,
                 "device_kind": device_kind}
+            if ttfts is not None:
+                bench_json["workloads"][f"poisson_{mode}_{fl}"].update(
+                    ttft_p50_s=float(np.percentile(ttfts, 50)),
+                    ttft_p95_s=float(np.percentile(ttfts, 95)))
 
     # --- shared-system-prompt workload: prefix cache on vs cold pool
     preqs = _shared_prefix_workload(cfg, corpus)
@@ -398,6 +482,60 @@ def run(row: Row, gen: int = 16, requests: int = 4):
                         "on CPU run under XLA_FLAGS="
                         "--xla_force_host_platform_device_count=2"),
             "device_kind": device_kind}
+    # --- front-door scheduling: bursty two-tenant workload, SLO off vs on
+    # (DESIGN.md §12).  The off leg measures how badly chat's chunked
+    # prefills inflate decode gaps when admission is ungoverned; its gap
+    # distribution then sets the on leg's target (between the p50 decode
+    # floor and the inflated p95, so the controller has both something to
+    # fix and room to fix it).  Both legs must stay token-identical to a
+    # plain engine.run of the same requests — preemption replay included.
+    breqs = _bursty_two_tenant(cfg, corpus)
+    ref = _paged_serve(cfg, qp, _bursty_two_tenant(cfg, corpus), True,
+                       prefix_cache=True)[4]
+    off = _sched_serve(cfg, qp, _bursty_two_tenant(cfg, corpus), None)
+    gap_ms_off = off["gaps"] * 1e3
+    slo_ms = float(min(1.5 * np.percentile(gap_ms_off, 50),
+                       0.7 * np.percentile(gap_ms_off, 95)))
+    on = _sched_serve(cfg, qp, _bursty_two_tenant(cfg, corpus), slo_ms)
+    gap_ms_on = on["gaps"] * 1e3
+    sched_mismatch = sum(
+        not np.array_equal(leg["results"][r.rid].tokens, ref[r.rid].tokens)
+        for leg in (off, on) for r in breqs)
+    p95_off, p95_on = (float(np.percentile(gap_ms_off, 95)),
+                       float(np.percentile(gap_ms_on, 95)))
+    row.add("serve/frontdoor_slo", on["wall"] / max(on["toks"], 1) * 1e6,
+            f"slo_p95_ms={slo_ms:.1f};gap_p95_ms_off={p95_off:.1f};"
+            f"gap_p95_ms_on={p95_on:.1f};"
+            f"preemptions_off={off['sched_stats'].get('preempted', 0)};"
+            f"preemptions_on={on['sched_stats'].get('preempted', 0)};"
+            f"chat_p95_s_on={np.percentile(on['lats']['chat'], 95):.2f};"
+            f"token_mismatches={sched_mismatch}")
+    per_tenant = {}
+    for tenant in ("batch", "chat"):
+        per_tenant[tenant] = {
+            "p50_s_off": float(np.percentile(off["lats"][tenant], 50)),
+            "p95_s_off": float(np.percentile(off["lats"][tenant], 95)),
+            "p50_s_on": float(np.percentile(on["lats"][tenant], 50)),
+            "p95_s_on": float(np.percentile(on["lats"][tenant], 95)),
+            "ttft_p50_s_on": float(np.percentile(on["ttfts"][tenant], 50)),
+            "ttft_p95_s_on": float(np.percentile(on["ttfts"][tenant], 95))}
+    bench_json["workloads"]["frontdoor_slo"] = {
+        "slo_p95_ms": slo_ms,
+        "decode_gap_p50_ms_off": float(np.percentile(gap_ms_off, 50)),
+        "decode_gap_p95_ms_off": p95_off,
+        "decode_gap_p50_ms_on": float(np.percentile(gap_ms_on, 50)),
+        "decode_gap_p95_ms_on": p95_on,
+        "slo_gap_p95_improved": bool(p95_on < p95_off),
+        "preemptions_off": int(off["sched_stats"].get("preempted", 0)),
+        "preemptions_on": int(on["sched_stats"].get("preempted", 0)),
+        "replays_on": int(on["engine_stats"].get("replays", 0)),
+        "slo_throttled_ticks": int(
+            on["sched_stats"].get("slo_throttled_ticks", 0)),
+        "per_tenant": per_tenant,
+        "token_mismatches": int(sched_mismatch),
+        "interpret_mode": False,
+        "device_kind": device_kind}
+
     with open("BENCH_serve.json", "w") as f:
         json.dump(bench_json, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -27,11 +27,23 @@ shard over N chips and greedy outputs stay token-identical to ``--tp 1``;
 on CPU, force devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
+``--serve`` switches from the one-shot batch run to the streaming front
+door (DESIGN.md §12): an HTTP server on ``--port`` exposing
+``POST /v1/generate`` with per-token SSE, per-tenant priority admission
+with weighted fair sharing (``--max-tenant-share`` caps one tenant's slot
+fraction), drop-and-replay preemption, and — with ``--slo-p95-ms`` set —
+an SLO controller that throttles chunked-prefill admission when the
+decode-gap p95 exceeds the target.  The engine knobs above (slots, block
+size, quantization, speculation, tp) all apply to the served engine.
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --tiny \
       --avg-bits 3.3 --requests 8 --gen 32
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --tiny \
       --avg-bits 4.0 --speculate 3 --draft-bits 2.2 --requests 4 --gen 16
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --tiny \
+      --serve --port 8080 --slo-p95-ms 50
 """
 from __future__ import annotations
 
@@ -138,11 +150,30 @@ def main():
                          "model axis (paged engine; must divide the device "
                          "count — on CPU force devices with "
                          "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--serve", action="store_true",
+                    help="boot the streaming HTTP/SSE front door on --port "
+                         "instead of the one-shot batch run (paged engine; "
+                         "POST /v1/generate, GET /healthz, GET /v1/stats); "
+                         "--prompt-len + --gen size the pool's max context")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="front door listen port (0 binds an ephemeral "
+                         "port; the chosen one is printed at boot)")
+    ap.add_argument("--slo-p95-ms", type=float, default=None,
+                    help="front door: decode-gap p95 target in ms — past "
+                         "it the scheduler throttles chunked-prefill "
+                         "admission until p95 recovers (default: "
+                         "controller off)")
+    ap.add_argument("--max-tenant-share", type=float, default=1.0,
+                    help="front door: max fraction of engine slots one "
+                         "tenant may hold while other tenants wait "
+                         "(default 1.0 = uncapped)")
     args = ap.parse_args()
     if args.speculate and args.lockstep:
         ap.error("--speculate needs the paged engine (drop --lockstep)")
     if args.tp > 1 and args.lockstep:
         ap.error("--tp needs the paged engine (drop --lockstep)")
+    if args.serve and args.lockstep:
+        ap.error("--serve needs the paged engine (drop --lockstep)")
 
     cfg = get_tiny(args.arch) if args.tiny else get_config(args.arch)
     key = jax.random.PRNGKey(0)
@@ -202,6 +233,15 @@ def main():
                              paged_kernel=args.paged_kernel,
                              draft_params=draft_params,
                              speculate=args.speculate, mesh=mesh)
+        if args.serve:
+            from repro.serve.frontdoor import FrontDoor, SchedConfig
+            door = FrontDoor(
+                engine,
+                SchedConfig(slo_p95_ms=args.slo_p95_ms,
+                            max_tenant_share=args.max_tenant_share),
+                port=args.port)
+            door.serve_forever()
+            return
         results = engine.run([Request(rid=i, prompt=np.asarray(prompt),
                                       max_new=args.gen)
                               for i in range(args.requests)])

@@ -1,12 +1,18 @@
 """Continuous-batching serving engine with a paged KV-cache pool.
 
-``pool``   — fixed block arena + per-request block tables + slot arrays;
-             refcounted block ownership + content-addressed prefix cache.
-``engine`` — request queue, admission control (with prefix reuse / COW),
-             chunked prefill interleaved with decode, per-request
-             completion, and optional self-speculative decoding (a low-bit
-             draft quantization proposes tokens the target verifies in one
-             batched step; DESIGN.md §9).
+``pool``      — fixed block arena + per-request block tables + slot arrays;
+                refcounted block ownership + content-addressed prefix cache.
+``engine``    — request queue, admission control (with prefix reuse / COW),
+                chunked prefill interleaved with decode, per-request
+                completion with streaming ``on_token`` emission, re-entrant
+                ``step()``/``poll()`` driving, drop-and-replay
+                ``preempt()``, and optional self-speculative decoding (a
+                low-bit draft quantization proposes tokens the target
+                verifies in one batched step; DESIGN.md §9).
+``frontdoor`` — the async serving layer over the engine: priority/fair-share
+                ``Scheduler`` with SLO-aware prefill throttling, the
+                asyncio HTTP/SSE server, and a stdlib streaming client
+                (DESIGN.md §12).
 """
 from .engine import PagedServer, Request, RequestResult, speculative_accept
 from .pool import (BlockAllocator, PoolConfig, PrefixCache, init_pool_caches,

@@ -43,7 +43,7 @@ import collections
 import contextlib
 import dataclasses
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,25 +61,57 @@ from .pool import (BlockAllocator, PoolConfig, PrefixCache, init_pool_caches,
 
 @dataclasses.dataclass
 class Request:
-    """One generation request.  ``arrival`` is seconds after run start
-    (workload simulation); the engine will not admit it earlier."""
+    """One generation request.  ``arrival`` is seconds after engine-clock
+    start (workload simulation / HTTP arrival time); the engine will not
+    admit it earlier.  ``tenant`` / ``priority`` / ``deadline`` are
+    scheduling metadata the engine itself ignores — the front-door
+    ``Scheduler`` (serve/frontdoor, DESIGN.md §12) orders admission and
+    picks preemption victims by them.  ``on_token`` (if set) is called as
+    ``on_token(rid, token, t)`` from the serving thread the moment each
+    token is emitted — the streaming hook the SSE server bridges onto an
+    asyncio queue; it must be cheap and must not raise."""
     rid: int
     prompt: np.ndarray               # (plen,) int32
     max_new: int
     eos: Optional[int] = None
     arrival: float = 0.0
+    tenant: str = "default"
+    priority: int = 0                # higher = more urgent
+    deadline: Optional[float] = None  # engine-clock seconds (SLO metadata)
+    on_token: Optional[Callable[[int, int, float], None]] = None
 
 
 @dataclasses.dataclass
 class RequestResult:
     """Completion record for one request: the generated tokens plus the
-    admission / first-token / completion timestamps (seconds after run
-    start) the serving benchmarks turn into latency percentiles."""
+    admission / first-token / completion timestamps (engine-clock seconds)
+    the serving benchmarks turn into latency percentiles.  ``ttft_s`` is
+    time-to-first-token measured from the request's *arrival* (queueing
+    included), ``token_times`` the engine-clock emission time of every
+    generated token, and ``preemptions`` how many times the request was
+    drop-and-replay preempted (its timestamps span incarnations: ``t_admit``
+    / ``t_first`` are from the first, ``t_done`` from the last)."""
     rid: int
     tokens: np.ndarray               # generated tokens (<= max_new)
-    t_admit: float                   # seconds after run start
+    t_admit: float                   # engine-clock seconds
     t_first: float                   # first generated token
     t_done: float
+    ttft_s: float = 0.0              # t_first - arrival
+    token_times: np.ndarray = None   # (len(tokens),) emission times
+    preemptions: int = 0
+    tenant: str = "default"
+
+
+@dataclasses.dataclass
+class _Replay:
+    """Continuation state of a preempted request, keyed by rid until the
+    scheduler resubmits it: the tokens already emitted (replayed as extra
+    prompt) and the first-incarnation timestamps."""
+    prior: list
+    t_admit: float
+    t_first: float
+    token_times: list
+    preemptions: int
 
 
 @dataclasses.dataclass
@@ -89,13 +121,22 @@ class _InFlight:
     blocks: list
     bt_row: np.ndarray               # (MB,) int32 physical block ids
     ring_cap: int                    # tokens; ring for windowed archs
-    filled: int = 0                  # prompt tokens prefilled so far
+    served: np.ndarray = None        # prompt + replayed tokens actually fed
+    filled: int = 0                  # served tokens prefilled so far
     out: list = dataclasses.field(default_factory=list)
+    prior: list = dataclasses.field(default_factory=list)  # pre-preemption
+    token_times: list = dataclasses.field(default_factory=list)
+    preemptions: int = 0
     t_admit: float = 0.0
     t_first: float = 0.0
     chain: object = None             # prefix-cache hash of last full block
     n_hashed: int = 0                # full blocks matched/registered so far
     draft_pos: int = 0               # draft-KV-valid positions (speculation)
+
+    @property
+    def n_done(self) -> int:
+        """Tokens emitted across all incarnations (sampling step index)."""
+        return len(self.prior) + len(self.out)
 
 
 def speculative_accept(target_logits: np.ndarray, draft_logits: np.ndarray,
@@ -255,6 +296,14 @@ class PagedServer:
         self._pending: collections.deque[Request] = collections.deque()
         self._prefilling: collections.deque[_InFlight] = collections.deque()
         self._active: dict[int, _InFlight] = {}
+        self._replay: dict[int, _Replay] = {}
+        self._t0: float | None = None
+        self._last_decode_end: float | None = None
+        # Gap between the ends of consecutive decode steps — the per-token
+        # decode latency a request actually observes, inflated by whatever
+        # (chunked prefill, admission work) the scheduler interleaves.  The
+        # front-door SLO controller reads the tail of this window.
+        self.decode_gaps: collections.deque = collections.deque(maxlen=2048)
 
         # Caches are donated: the pool buffers alias input->output instead of
         # being copied every step (same pattern as launch/dryrun.py).  jit's
@@ -354,12 +403,29 @@ class PagedServer:
 
     # ------------------------------------------------------------ lifecycle
 
-    def submit(self, req: Request) -> None:
-        """Queue a request for admission (it will not start before
-        ``req.arrival``).  Validates up front that the request can ever be
-        served by this pool — non-empty prompt, at least one generated
-        token, and a total footprint (prompt + max_new, plus speculative
-        lookahead) that fits ``max_context`` and the block arena."""
+    def start_clock(self, reset: bool = False) -> None:
+        """Pin the engine clock's zero (idempotent unless ``reset``).
+        ``run`` resets it per call; a continuously-serving front door pins
+        it once at boot.  Pass ``reset=True`` after warmup traffic so
+        arrival offsets of a timed workload count from now, not from the
+        warmup's clock."""
+        if reset or self._t0 is None:
+            self._t0 = time.monotonic()
+            self._last_decode_end = None
+
+    def now(self) -> float:
+        """Seconds since the engine clock started (starts it if needed) —
+        the time base of ``Request.arrival`` and every result timestamp."""
+        self.start_clock()
+        return time.monotonic() - self._t0
+
+    def validate(self, req: Request) -> None:
+        """Raise ValueError unless the request can ever be served by this
+        pool — non-empty prompt, at least one generated token, and a total
+        footprint (prompt + max_new, plus speculative lookahead) that fits
+        ``max_context`` and the block arena.  The front door calls this at
+        the HTTP boundary so a bad request 400s instead of poisoning the
+        serving thread."""
         if len(req.prompt) < 1 or req.max_new < 1:
             raise ValueError(
                 f"request {req.rid}: needs a non-empty prompt and "
@@ -374,15 +440,42 @@ class PagedServer:
             raise ValueError(
                 f"request {req.rid}: needs {need} blocks, pool has "
                 f"{self.allocator.num_blocks - 1}")
+
+    def submit(self, req: Request) -> None:
+        """Queue a request for admission (it will not start before
+        ``req.arrival``); validates via :meth:`validate` first."""
+        self.validate(req)
         self._pending.append(req)
+
+    def can_admit(self, req: Request) -> bool:
+        """Whether admitting ``req`` right now would succeed: a free slot
+        and enough allocatable blocks for its full capacity.  Conservative —
+        prefix-cache hits can only reduce the fresh-block need (hit blocks
+        are either free-listed, LRU-parked, or already referenced, and the
+        first two are counted by ``free_blocks``)."""
+        if not self.free_slots:
+            return False
+        need = request_blocks(self.cfg, self.pool,
+                              len(req.prompt) + req.max_new)
+        return need <= self.allocator.free_blocks
 
     def _try_admit(self, now: float) -> None:
         # FIFO with head-of-line blocking: admission control is purely
         # "do I have a slot and enough blocks for this request's capacity".
+        # (Priority / fair-share ordering lives a layer up, in the
+        # front-door Scheduler, which feeds this queue one admissible
+        # request at a time.)
         while self._pending and self._pending[0].arrival <= now:
             req = self._pending[0]
             if not self.free_slots:
                 return
+            # A replayed (preempted) request re-feeds its already-emitted
+            # tokens as extra prompt; its total footprint is unchanged
+            # (prompt + max_new counts every token exactly once).
+            rp = self._replay.get(req.rid)
+            served = (np.concatenate([np.asarray(req.prompt, np.int32),
+                                      np.asarray(rp.prior, np.int32)])
+                      if rp and rp.prior else np.asarray(req.prompt, np.int32))
             total = len(req.prompt) + req.max_new
             need = request_blocks(self.cfg, self.pool, total)
             # Longest cached prefix: whole-block hits are shared (refcount
@@ -394,7 +487,7 @@ class PagedServer:
             parent, cached, cow_src = None, 0, None
             if self.prefix_cache is not None:
                 hits, parent, cached, cow_src = self.prefix_cache.match(
-                    req.prompt, len(req.prompt) - 1)
+                    served, len(served) - 1)
                 for b in hits:
                     self.allocator.incref(b)
                 if cow_src is not None:
@@ -420,21 +513,29 @@ class PagedServer:
                 self.stats["prefix_cow"] = self.stats.get("prefix_cow", 0) + 1
             blocks = hits + fresh
             self._pending.popleft()
+            self._replay.pop(req.rid, None)
             slot = self.free_slots.pop()
             bt_row = np.zeros(self.table_width, np.int32)
             bt_row[:need] = blocks
             ring_cap = len(blocks) * self.pool.block_size if blocks else 1
             if self.prefix_cache is not None:
                 self.stats["prompt_tokens"] = (
-                    self.stats.get("prompt_tokens", 0) + len(req.prompt))
+                    self.stats.get("prompt_tokens", 0) + len(served))
                 self.stats["prefill_tokens_saved"] = (
                     self.stats.get("prefill_tokens_saved", 0) + cached)
                 if cached:
                     self.stats["prefix_hits"] = (
                         self.stats.get("prefix_hits", 0) + 1)
+            if rp is not None:
+                self.stats["replays"] = self.stats.get("replays", 0) + 1
             self._prefilling.append(_InFlight(
                 req=req, slot=slot, blocks=blocks, bt_row=bt_row,
-                ring_cap=ring_cap, filled=cached, t_admit=now,
+                ring_cap=ring_cap, served=served, filled=cached,
+                prior=list(rp.prior) if rp else [],
+                token_times=list(rp.token_times) if rp else [],
+                preemptions=rp.preemptions if rp else 0,
+                t_admit=rp.t_admit if rp else now,
+                t_first=rp.t_first if rp else 0.0,
                 chain=parent, n_hashed=len(hits), draft_pos=cached))
 
     def _register_blocks(self, st: _InFlight, seq, upto: int) -> None:
@@ -447,13 +548,25 @@ class PagedServer:
                 st.chain, seq[k * bs:(k + 1) * bs], int(st.bt_row[k]))
             st.n_hashed += 1
 
+    def _emit(self, st: _InFlight, tok: int, now: float) -> None:
+        """One token leaves the engine: record it (and its emission time),
+        stamp TTFT on the request's very first token, and fire the
+        streaming callback."""
+        st.out.append(int(tok))
+        st.token_times.append(now)
+        if st.t_first == 0.0 and not st.prior:
+            st.t_first = now
+        if st.req.on_token is not None:
+            st.req.on_token(st.req.rid, int(tok), now)
+
     def _finish(self, st: _InFlight, now: float,
                 results: dict[int, RequestResult]) -> None:
         if self.prefix_cache is not None:
-            # decode wrote KV through position plen + len(out) - 2 (the last
-            # sampled token was never fed back), so generated tokens extend
-            # the cached chain too — multi-turn prompts hit their history
-            seq = np.concatenate([st.req.prompt,
+            # decode wrote KV through position len(served) + len(out) - 2
+            # (the last sampled token was never fed back), so generated
+            # tokens extend the cached chain too — multi-turn prompts hit
+            # their history
+            seq = np.concatenate([st.served,
                                   np.asarray(st.out[:-1], np.int32)])
             self._register_blocks(st, seq, len(seq))
         # children (later blocks) enter the idle LRU first, so eviction
@@ -462,18 +575,22 @@ class PagedServer:
             self.allocator.decref(b)
         self.free_slots.append(st.slot)
         del self._active[st.slot]
+        tokens = st.prior + st.out
         results[st.req.rid] = RequestResult(
-            rid=st.req.rid, tokens=np.asarray(st.out, np.int32),
-            t_admit=st.t_admit, t_first=st.t_first, t_done=now)
+            rid=st.req.rid, tokens=np.asarray(tokens, np.int32),
+            t_admit=st.t_admit, t_first=st.t_first, t_done=now,
+            ttft_s=st.t_first - st.req.arrival,
+            token_times=np.asarray(st.token_times, np.float64),
+            preemptions=st.preemptions, tenant=st.req.tenant)
 
     def _prefill_one(self, t0: float,
                      results: dict[int, RequestResult]) -> None:
         st = self._prefilling[0]
-        plen = len(st.req.prompt)
+        plen = len(st.served)
         c = min(self.pool.prefill_chunk, plen - st.filled)
         if self.has_attn:
             c = min(c, st.ring_cap)   # scatter uniqueness within a chunk
-        toks = jnp.asarray(st.req.prompt[st.filled:st.filled + c],
+        toks = jnp.asarray(st.served[st.filled:st.filled + c],
                            jnp.int32)[None]
         with self._kernel_scope():
             logits, self.caches = self._chunk(
@@ -496,14 +613,13 @@ class PagedServer:
         if self.prefix_cache is not None:
             # blocks completed by this chunk are fully written: publish them
             # so concurrent requests sharing the prompt hit them immediately
-            self._register_blocks(st, st.req.prompt, st.filled)
+            self._register_blocks(st, st.served, st.filled)
         if st.filled == plen:
             self._prefilling.popleft()
-            tok = self._sample(np.asarray(logits[0]), st.req.rid, 0)
+            tok = self._sample(np.asarray(logits[0]), st.req.rid, st.n_done)
             now = time.monotonic() - t0       # after the step has completed
-            st.out.append(tok)
-            st.t_first = now
-            if len(st.out) >= st.req.max_new or tok == st.req.eos:
+            self._emit(st, tok, now)
+            if st.n_done >= st.req.max_new or tok == st.req.eos:
                 self._active[st.slot] = st   # _finish expects it registered
                 self._finish(st, now, results)
             else:
@@ -519,7 +635,7 @@ class PagedServer:
         ring = np.ones(s, np.int32)
         for slot, st in self._active.items():
             tokens[slot, 0] = st.out[-1]
-            pos[slot] = len(st.req.prompt) + len(st.out) - 1
+            pos[slot] = len(st.served) + len(st.out) - 1
             active[slot] = True
             bts[slot] = st.bt_row
             ring[slot] = st.ring_cap
@@ -535,9 +651,9 @@ class PagedServer:
             len(self._active) / self.pool.max_slots)
         for slot in list(self._active):
             st = self._active[slot]
-            tok = self._sample(logits[slot], st.req.rid, len(st.out))
-            st.out.append(tok)
-            if len(st.out) >= st.req.max_new or tok == st.req.eos:
+            tok = self._sample(logits[slot], st.req.rid, st.n_done)
+            self._emit(st, tok, now)
+            if st.n_done >= st.req.max_new or tok == st.req.eos:
                 self._finish(st, now, results)
 
     # ---------------------------------------------------------- speculation
@@ -563,10 +679,10 @@ class PagedServer:
         bts = np.zeros((s, self.table_width), np.int32)
         ring = np.ones(s, np.int32)
         for slot, st in self._active.items():
-            p = len(st.req.prompt) + len(st.out) - 1
+            p = len(st.served) + len(st.out) - 1
             pos[slot] = p
             catch[slot, 0] = (st.out[-2] if len(st.out) >= 2
-                              else st.req.prompt[-1])
+                              else st.served[-1])
             catch[slot, 1] = st.out[-1]
             active[slot] = True
             # after an all-accept round the bonus token's predecessor (d_k)
@@ -590,7 +706,7 @@ class PagedServer:
         for i in range(k):
             draft_logits[:, i] = dl
             for slot, st in self._active.items():
-                d = self._draft_sample(dl[slot], st.req.rid, len(st.out), i)
+                d = self._draft_sample(dl[slot], st.req.rid, st.n_done, i)
                 draft_tokens[slot, i] = d
                 toks[slot, 0] = d
             if i < k - 1:
@@ -617,7 +733,7 @@ class PagedServer:
             # greedy needs no RNG (and warmup requests may carry negative
             # rids, which SeedSequence rejects)
             rng = (np.random.default_rng(
-                       (self.seed, st.req.rid, len(st.out), 7))
+                       (self.seed, st.req.rid, st.n_done, 7))
                    if self.temperature > 0.0 else None)
             emitted, n_acc = speculative_accept(
                 tlog[slot], draft_logits[slot], draft_tokens[slot],
@@ -631,40 +747,145 @@ class PagedServer:
             # (the replacement/bonus token is never fed to the draft)
             st.draft_pos = min(p + n_acc + 1, p + k)
             for tok in emitted:
-                st.out.append(int(tok))
-                if (len(st.out) >= st.req.max_new or tok == st.req.eos):
+                self._emit(st, tok, now)
+                if (st.n_done >= st.req.max_new or tok == st.req.eos):
                     break
-            if len(st.out) >= st.req.max_new or st.out[-1] == st.req.eos:
+            if st.n_done >= st.req.max_new or st.out[-1] == st.req.eos:
                 self._finish(st, now, results)
+
+    # --------------------------------------------------------- preemption
+
+    def _evict_inflight(self, rid: int) -> Optional[_InFlight]:
+        """Pull request ``rid`` out of the prefill/decode sets: register
+        its fully-written blocks in the prefix cache (so they park on the
+        allocator's LRU with their KV intact rather than being recomputed
+        from scratch later), release its block refs, and free its slot.
+        Returns the removed state, or None if ``rid`` is not in flight."""
+        st = next((s for s in self._active.values() if s.req.rid == rid),
+                  None)
+        from_active = st is not None
+        if st is None:
+            st = next((s for s in self._prefilling if s.req.rid == rid),
+                      None)
+        if st is None:
+            return None
+        if self.prefix_cache is not None:
+            # KV is written through len(served)+len(out)-2 when decoding
+            # (the newest sampled token was never fed back); mid-prefill,
+            # _prefill_one already registered every completed block.
+            if st.out:
+                seq = np.concatenate([st.served,
+                                      np.asarray(st.out[:-1], np.int32)])
+                self._register_blocks(st, seq, len(seq))
+        for b in reversed(st.blocks):
+            self.allocator.decref(b)
+        self.free_slots.append(st.slot)
+        if from_active:
+            del self._active[st.slot]
+        else:
+            self._prefilling.remove(st)
+        return st
+
+    def preempt(self, rid: int) -> Request | None:
+        """Drop-and-replay preemption (DESIGN.md §12): evict request
+        ``rid``'s KV blocks and return its ``Request`` so a scheduler can
+        requeue it; ``None`` if ``rid`` is not in flight.
+
+        The victim's generated KV blocks are registered in the prefix
+        cache before its refs are released, so on a cacheable engine the
+        replay's prefill is a warm walk over its own cached history and
+        recompute is one chunk, not the whole sequence (unless allocation
+        pressure reclaimed the blocks in between).  The replay
+        continuation (already-emitted tokens, first-incarnation
+        timestamps) is held internally by rid and picked up when the same
+        rid is resubmitted; emitted tokens are re-fed as extra prompt, so
+        a preempted-then-replayed greedy request is token-identical to an
+        uninterrupted run (pinned in tests/test_frontdoor.py)."""
+        st = self._evict_inflight(rid)
+        if st is None:
+            return None
+        self._replay[rid] = _Replay(
+            prior=st.prior + st.out, t_admit=st.t_admit, t_first=st.t_first,
+            token_times=list(st.token_times),
+            preemptions=st.preemptions + 1)
+        self.stats["preemptions"] = self.stats.get("preemptions", 0) + 1
+        return st.req
+
+    def cancel(self, rid: int) -> bool:
+        """Abort request ``rid`` wherever it is — queued, prefilling, or
+        decoding — freeing its resources and dropping any replay
+        continuation (the front door calls this when a streaming client
+        disconnects).  Returns True if anything was removed."""
+        for i, r in enumerate(self._pending):
+            if r.rid == rid:
+                del self._pending[i]
+                self._replay.pop(rid, None)
+                self.stats["cancelled"] = self.stats.get("cancelled", 0) + 1
+                return True
+        had_replay = self._replay.pop(rid, None) is not None
+        st = self._evict_inflight(rid)
+        if st is not None or had_replay:
+            self.stats["cancelled"] = self.stats.get("cancelled", 0) + 1
+        return st is not None or had_replay
+
+    def inflight(self) -> list:
+        """Scheduler's view of every request currently holding (or queued
+        for) resources: ``(request, phase, tokens_done, t_admit)`` tuples
+        with phase in ``{"pending", "prefill", "decode"}``.  ``prefill`` and
+        ``decode`` entries hold a slot and blocks and are preemptible."""
+        out = [(r, "pending", 0, r.arrival) for r in self._pending]
+        out += [(s.req, "prefill", s.n_done, s.t_admit)
+                for s in self._prefilling]
+        out += [(s.req, "decode", s.n_done, s.t_admit)
+                for s in self._active.values()]
+        return out
 
     # ------------------------------------------------------------------ run
 
-    def run(self, requests: list[Request] | None = None
-            ) -> dict[int, RequestResult]:
-        """Serve until every submitted request completes.  Returns
-        rid -> RequestResult; aggregate stats land in ``self.stats``
-        (occupancy, prefill/prefix counters, and — when speculating —
-        spec_rounds / spec_proposed / spec_accepted / acceptance_rate)."""
-        for r in requests or []:
-            self.submit(r)
-        self._pending = collections.deque(
-            sorted(self._pending, key=lambda r: r.arrival))
+    def poll(self) -> bool:
+        """Whether the engine has outstanding work (queued, prefilling, or
+        decoding requests).  Preempted-but-not-yet-resubmitted requests are
+        the *scheduler's* outstanding work, not the engine's."""
+        return bool(self._pending or self._prefilling or self._active)
+
+    @property
+    def active_count(self) -> int:
+        """Requests currently decoding (the population an SLO protects)."""
+        return len(self._active)
+
+    def step(self, *, prefill: bool = True
+             ) -> dict[int, RequestResult]:
+        """ONE re-entrant scheduler iteration: admit due requests, run one
+        prompt chunk (unless ``prefill=False`` — the SLO controller's
+        chunked-prefill throttle), then one decode step over the slot set.
+        Returns the requests that finished during this call (streaming
+        consumers also saw their tokens via ``on_token``).  ``run`` is a
+        drain loop over this; a front door calls it forever."""
         results: dict[int, RequestResult] = {}
-        t0 = time.monotonic()
-        while self._pending or self._prefilling or self._active:
-            self._try_admit(time.monotonic() - t0)
-            if self._prefilling:
-                self._prefill_one(t0, results)
-            if self._active:
-                if self.speculate:
-                    self._spec_decode_once(t0, results)
-                else:
-                    self._decode_once(t0, results)
-            elif not self._prefilling:
-                if self._pending:
-                    wait = self._pending[0].arrival - (time.monotonic() - t0)
-                    if wait > 0:
-                        time.sleep(min(wait, 0.05))
+        self.start_clock()
+        self._try_admit(self.now())
+        if prefill and self._prefilling:
+            self._prefill_one(self._t0, results)
+        if self._active:
+            if self.speculate:
+                self._spec_decode_once(self._t0, results)
+            else:
+                self._decode_once(self._t0, results)
+            end = time.monotonic()
+            if self._last_decode_end is not None:
+                gap = end - self._last_decode_end
+                self.decode_gaps.append(gap)
+                self.stats.setdefault("decode_gap_s", []).append(gap)
+            self._last_decode_end = end
+        else:
+            # no decode ran: the next gap would measure idleness, not
+            # scheduling interference — restart the gap baseline
+            self._last_decode_end = None
+        return results
+
+    def finalize_stats(self) -> dict:
+        """Fold the per-step counters into the summary numbers (mean
+        occupancy, acceptance rate, prefix hit rate); returns ``stats``."""
         occ = self.stats.get("occupancy", [])
         self.stats["mean_occupancy"] = float(np.mean(occ)) if occ else 0.0
         if self.speculate:
@@ -677,4 +898,26 @@ class PagedServer:
                 self.stats.get("prefill_tokens_saved", 0) / pt if pt else 0.0)
             self.stats["prefix_evictions"] = self.prefix_cache.evictions
             self.stats["prefix_cached_blocks"] = len(self.prefix_cache)
+        return self.stats
+
+    def run(self, requests: list[Request] | None = None
+            ) -> dict[int, RequestResult]:
+        """Serve until every submitted request completes.  Returns
+        rid -> RequestResult; aggregate stats land in ``self.stats``
+        (occupancy, prefill/prefix counters, and — when speculating —
+        spec_rounds / spec_proposed / spec_accepted / acceptance_rate)."""
+        for r in requests or []:
+            self.submit(r)
+        self._pending = collections.deque(
+            sorted(self._pending, key=lambda r: r.arrival))
+        results: dict[int, RequestResult] = {}
+        self._t0 = time.monotonic()       # each run() restarts the clock
+        self._last_decode_end = None
+        while self.poll():
+            results.update(self.step())
+            if not self._active and not self._prefilling and self._pending:
+                wait = self._pending[0].arrival - self.now()
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+        self.finalize_stats()
         return results

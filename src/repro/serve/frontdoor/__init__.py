@@ -1,0 +1,22 @@
+"""Async streaming front door over the paged serving engine (DESIGN.md §12).
+
+``scheduler`` — ``Scheduler``: per-tenant priority admission queues with
+                weighted fair sharing, drop-and-replay preemption of the
+                engine's in-flight requests, and an SLO controller that
+                throttles chunked-prefill admission (with hysteresis) when
+                decode p95 degrades past a target.
+``server``    — ``FrontDoor``: hand-rolled asyncio HTTP server exposing
+                ``POST /v1/generate`` with per-token SSE streaming (plus
+                ``/healthz`` and ``/v1/stats``), driving the engine +
+                scheduler on a background thread.
+``sse``       — Server-Sent-Events wire format (encode + incremental parse),
+                shared by server and client.
+``client``    — stdlib-only streaming client (``stream_generate``) and a
+                tiny CLI (``python -m repro.serve.frontdoor.client``).
+"""
+from .scheduler import SchedConfig, Scheduler
+from .server import FrontDoor
+from .sse import encode_event, iter_events
+
+__all__ = ["SchedConfig", "Scheduler", "FrontDoor", "encode_event",
+           "iter_events"]

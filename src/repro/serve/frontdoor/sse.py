@@ -1,0 +1,41 @@
+"""Server-Sent-Events wire format (the streaming half of DESIGN.md §12).
+
+One event is an ``event:`` line, one or more ``data:`` lines, and a blank
+terminator; payloads here are always a single JSON object.  ``encode_event``
+is what the server writes; ``iter_events`` is the incremental parser the
+bundled client (and the tests) read streams back through.  Lines starting
+with ``:`` are SSE comments (keep-alives) and are skipped.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, Iterator, Tuple
+
+
+def encode_event(event: str, data: dict) -> bytes:
+    """One SSE frame: ``event: <name>`` + JSON ``data`` + blank line."""
+    return (f"event: {event}\ndata: {json.dumps(data)}\n\n").encode("utf-8")
+
+
+def iter_events(lines: Iterable[str]) -> Iterator[Tuple[str, dict]]:
+    """Parse a stream of text lines into ``(event, data)`` pairs.
+
+    ``lines`` may keep or strip their newlines.  Multiple ``data:`` lines
+    concatenate (with ``\\n``, per the SSE spec) before the JSON decode;
+    events with no data yield ``{}``.  The unterminated tail of a closed
+    stream is ignored, matching browser EventSource behavior.
+    """
+    event, datas = None, []
+    for raw in lines:
+        line = raw.rstrip("\r\n")
+        if line == "":
+            if event is not None or datas:
+                payload = json.loads("\n".join(datas)) if datas else {}
+                yield (event or "message", payload)
+            event, datas = None, []
+        elif line.startswith(":"):
+            continue
+        elif line.startswith("event:"):
+            event = line[len("event:"):].strip()
+        elif line.startswith("data:"):
+            datas.append(line[len("data:"):].strip())

@@ -28,6 +28,16 @@ cache itself is content-addressed: full blocks are keyed by a hash chain
 over (parent_hash, block_tokens), so a lookup walks the prompt block by
 block and two requests sharing a prompt prefix share physical blocks.
 
+The same park-on-LRU mechanics carry drop-and-replay preemption
+(DESIGN.md §12): before the engine evicts an in-flight victim it registers
+the victim's fully-written blocks — keyed by the victim's own
+prompt+generated hash chain, exactly as if a second request had presented
+that sequence as its prompt — so the blocks survive refcount release with
+their KV intact, the replay's prefill walks them as ordinary cache hits,
+and under allocation pressure they age out through the ordinary LRU path
+(a preempted request's parked history is reclaimable capacity, never a
+reservation).
+
 Tensor parallelism (DESIGN.md §11): the arena's device placement is the
 engine's business, not the pool's — under ``--tp N`` the KV-head axis of
 every attention arena is sharded over the mesh's ``"model"`` axis while
